@@ -1,0 +1,57 @@
+"""Shared benchmark plumbing: timing, CSV output, worker-runtime simulation."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def block(x):
+    return jax.block_until_ready(x)
+
+
+def timeit(fn, *args, repeat: int = 3):
+    """Median wall seconds of fn(*args) after one warmup."""
+    block(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        block(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".csv")
+    if rows:
+        keys = list(rows[0].keys())
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def print_table(title: str, rows: List[Dict]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    keys = list(rows[0].keys())
+    print(" | ".join(keys))
+    for r in rows:
+        print(" | ".join(f"{r[k]:.4g}" if isinstance(r[k], float) else str(r[k]) for k in keys))
+
+
+def simulate_worker_times(key, q: int, *, mean_s: float, sigma: float = 0.35) -> np.ndarray:
+    """Lognormal worker runtimes — the paper's AWS-Lambda latency profile (Fig. 1
+    captions report 1.2-1.5x spread between sketch types; stragglers in the tail)."""
+    z = jax.random.normal(key, (q,))
+    return np.asarray(mean_s * np.exp(sigma * np.asarray(z)))

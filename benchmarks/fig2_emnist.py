@@ -1,0 +1,60 @@
+"""Paper Fig. 2: EMNIST-bymerge least squares — uniform sampling vs SJLT (s=20).
+
+Synthetic class-template image data (47 classes, 784 dims) stands in for EMNIST
+(offline container). One-hot-encoded multiclass least squares; we report cost and
+test accuracy vs the number of averaged worker outputs, paper params q=100, m=2000,
+s=20 (scaled in quick mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketches as sk, solve
+from repro.data import emnist_like
+from repro.data.regression import accuracy
+from repro.utils import prng
+from benchmarks.common import print_table, write_csv
+
+
+def run(quick: bool = True):
+    n_train, n_test = (30_000, 5_000) if quick else (200_000, 30_000)
+    q = 20 if quick else 100
+    m, s = 2000, 20
+    key = jax.random.PRNGKey(0)
+    A, B, meta = emnist_like(key, n_train)
+    At, Bt, meta_t = emnist_like(jax.random.PRNGKey(1), n_test)
+
+    X_star = solve.lstsq(A, B, reg=1e-3)
+    f_star = float(solve.residual_cost(A, B, X_star))
+    acc_star = float(accuracy(At, Bt, X_star, meta_t["labels"]))
+
+    rows = []
+    for name, spec in (
+        ("uniform", sk.SketchSpec("uniform", m, replacement=False)),
+        ("sjlt_s20", sk.SketchSpec("sjlt", m, s=s)),
+    ):
+        def worker(w):
+            return solve.sketch_and_solve(spec, prng.worker_key(key, w), A, B.astype(A.dtype), reg=1e-3, method="chol")
+
+        Xs = jax.lax.map(worker, jnp.arange(q), batch_size=4)  # (q, 784, 47)
+        for k in (1, 5, 10, q):
+            Xbar = jnp.mean(Xs[:k], axis=0)
+            cost = float(solve.residual_cost(A, B, Xbar))
+            acc = float(accuracy(At, Bt, Xbar, meta_t["labels"]))
+            rows.append(
+                {
+                    "sketch": name, "avg_outputs": k,
+                    "rel_err": (cost - f_star) / f_star,
+                    "test_acc": acc, "exact_acc": acc_star,
+                }
+            )
+
+    write_csv("fig2_emnist", rows)
+    print_table("Fig.2 EMNIST-like: uniform vs SJLT", rows)
+    # paper claim: SJLT drives cost lower / accuracy higher than uniform sampling
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

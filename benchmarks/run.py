@@ -1,0 +1,70 @@
+"""Benchmark orchestrator: one module per paper table/figure + framework extras.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,thm1,...]
+
+Each module writes results/bench/<name>.csv and prints a table; this runner
+aggregates pass/fail-style summaries where a benchmark encodes a checkable claim.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bias_bounds,
+    fig1_airline,
+    fig2_emnist,
+    fig3_synthetic,
+    fig4_leastnorm,
+    gradcomp_bench,
+    ihs_baseline,
+    kernel_bench,
+    privacy_bound,
+    sketch_dp_ablation,
+    thm1_validation,
+)
+
+MODULES = {
+    "thm1": thm1_validation,
+    "bias": bias_bounds,
+    "privacy": privacy_bound,
+    "fig1": fig1_airline,
+    "fig2": fig2_emnist,
+    "fig3": fig3_synthetic,
+    "fig4": fig4_leastnorm,
+    "ihs": ihs_baseline,
+    "gradcomp": gradcomp_bench,
+    "sketch_dp": sketch_dp_ablation,
+    "kernels": kernel_bench,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
+    ap.add_argument("--only", default="", help="comma-separated module keys")
+    args = ap.parse_args(argv)
+
+    keys = [k.strip() for k in args.only.split(",") if k.strip()] or list(MODULES)
+    failures = []
+    for k in keys:
+        mod = MODULES[k]
+        t0 = time.time()
+        print(f"\n########## {k} ({mod.__name__}) ##########", flush=True)
+        try:
+            mod.run(quick=not args.full)
+            print(f"[{k}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(k)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        return 1
+    print(f"\nAll {len(keys)} benchmarks completed; CSVs in results/bench/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

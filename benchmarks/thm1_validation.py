@@ -1,0 +1,93 @@
+"""Theorem 1 / Lemma 1 / Lemma 7 validation: Monte-Carlo vs the paper's EXACT errors.
+
+This is the experiment the paper itself could not run (it only has expectations):
+many-trial empirical means of (f(x̂)−f*)/f* and (f(x̄)−f*)/f* against
+
+    Lemma 1  :  d/(m−d−1)            (single Gaussian sketch)
+    Theorem 1:  d/(q·(m−d−1))        (q-average)
+    Lemma 7  :  (d−n)/(m−n−1)        (right sketch, n<d)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketches as sk, solve, theory
+from repro.data import gaussian_regression
+from repro.utils import prng
+from benchmarks.common import print_table, write_csv
+
+
+def run(quick: bool = True):
+    n, d = (2048, 24) if quick else (8192, 48)
+    trials = 200 if quick else 600
+    key = jax.random.PRNGKey(7)
+    A, b, _ = gaussian_regression(key, n, d, noise=1.0, planted=True)
+    x_star = solve.lstsq(A, b)
+    f_star = float(solve.residual_cost(A, b, x_star))
+
+    rows = []
+    for m in ([4 * d, 8 * d] if quick else [2 * d + 4, 4 * d, 8 * d]):
+        spec = sk.SketchSpec("gaussian", m)
+
+        def one(widx):
+            xk = solve.sketch_and_solve(spec, prng.worker_key(key, widx), A, b)
+            return solve.residual_cost(A, b, xk)
+
+        costs = jax.lax.map(one, jnp.arange(trials), batch_size=32)
+        emp_single = float(jnp.mean(costs)) / f_star - 1.0
+        exact_single = theory.gaussian_single_error(m, d)
+        rows.append(
+            {
+                "claim": "Lemma1", "m": m, "q": 1,
+                "empirical": emp_single, "exact": exact_single,
+                "ratio": emp_single / exact_single,
+            }
+        )
+        for q in (4, 16):
+            n_groups = trials // q
+
+            def xbar_cost(g):
+                def xk(w):
+                    return solve.sketch_and_solve(spec, prng.worker_key(key, g * q + w), A, b)
+
+                xs = jax.lax.map(xk, jnp.arange(q), batch_size=8)
+                return solve.residual_cost(A, b, jnp.mean(xs, axis=0))
+
+            costs_q = jax.lax.map(xbar_cost, jnp.arange(n_groups))
+            emp_avg = float(jnp.mean(costs_q)) / f_star - 1.0
+            exact_avg = theory.gaussian_averaged_error(m, d, q)
+            rows.append(
+                {
+                    "claim": "Thm1", "m": m, "q": q,
+                    "empirical": emp_avg, "exact": exact_avg,
+                    "ratio": emp_avg / exact_avg,
+                }
+            )
+
+    # Lemma 7 (right sketch): n < d
+    n2, d2 = (24, 512) if quick else (48, 1024)
+    A2, b2, _ = gaussian_regression(jax.random.PRNGKey(8), n2, d2, noise=0.0, planted=False)
+    x_star2 = solve.least_norm(A2, b2)
+    f_star2 = float(jnp.vdot(x_star2, x_star2))
+    m2 = 4 * n2
+    spec2 = sk.SketchSpec("gaussian", m2)
+
+    def one_ln(widx):
+        xk = solve.sketch_least_norm(spec2, prng.worker_key(key, widx), A2, b2)
+        e = xk - x_star2
+        return jnp.vdot(e, e)
+
+    errs = jax.lax.map(one_ln, jnp.arange(trials), batch_size=32)
+    emp7 = float(jnp.mean(errs)) / f_star2
+    exact7 = theory.gaussian_least_norm_error(m2, n2, d2)
+    rows.append({"claim": "Lemma7", "m": m2, "q": 1, "empirical": emp7, "exact": exact7, "ratio": emp7 / exact7})
+
+    write_csv("thm1_validation", rows)
+    print_table("Theorem 1 / Lemma 1 / Lemma 7: empirical vs exact", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

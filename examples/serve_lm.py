@@ -1,0 +1,14 @@
+"""Serve a reduced model with batched requests through the engine.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch granite-3-8b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--reduced" not in sys.argv:
+        sys.argv.append("--reduced")
+    if not any(a.startswith("--arch") for a in sys.argv):
+        sys.argv += ["--arch", "granite-3-8b"]
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""Train any assigned architecture (reduced size on CPU) end-to-end.
+
+    PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x7b --steps 30
+Thin wrapper over the launcher so the example stays one import away from prod.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--reduced" not in sys.argv:
+        sys.argv.append("--reduced")
+    if not any(a.startswith("--arch") for a in sys.argv):
+        sys.argv += ["--arch", "granite-3-8b"]
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""Sharded, atomic, any-mesh-restorable checkpointing."""
+from repro.checkpoint.store import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    AsyncCheckpointer,
+)

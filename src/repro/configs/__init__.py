@@ -1,0 +1,28 @@
+"""Config registry — importing this package registers every assigned architecture."""
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, get_config, list_archs, shape_applicable
+from repro.configs import (
+    pixtral_12b,
+    grok_1_314b,
+    mixtral_8x7b,
+    minicpm3_4b,
+    gemma3_12b,
+    chatglm3_6b,
+    granite_3_8b,
+    hymba_1_5b,
+    whisper_small,
+    falcon_mamba_7b,
+    paper_lsq,
+)
+
+ASSIGNED = [
+    "pixtral-12b",
+    "grok-1-314b",
+    "mixtral-8x7b",
+    "minicpm3-4b",
+    "gemma3-12b",
+    "chatglm3-6b",
+    "granite-3-8b",
+    "hymba-1.5b",
+    "whisper-small",
+    "falcon-mamba-7b",
+]

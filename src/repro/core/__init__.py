@@ -1,0 +1,12 @@
+"""Core library: the paper's contribution (distributed sketching for regression)."""
+from repro.core.sketches import SketchSpec, apply_sketch, sketch_data, materialize
+from repro.core.solve import (
+    lstsq,
+    least_norm,
+    sketch_and_solve,
+    sketch_least_norm,
+    residual_cost,
+    relative_error,
+)
+from repro.core.averaging import masked_average, psum_average, StreamingAverage
+from repro.core import theory, privacy, distributed, ihs, gradcomp

@@ -1,0 +1,84 @@
+"""Master-side model averaging (Algorithm 1) with straggler resilience.
+
+The paper's key systems claim is that because workers are i.i.d., the master may
+average *whatever subset has arrived* — the estimator is unchanged with the realized
+worker count q' ≤ q (Lemma 2 applies verbatim with q'). We express that as a masked
+mean so the same code runs: (a) locally over a stacked (q, d) array, (b) inside
+shard_map with ``jax.lax.psum`` over the worker mesh axis, (c) incrementally as a
+streaming average when outputs trickle in (the serverless mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_average(xs: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean over axis 0 of xs (q, ...), counting only mask==1 rows.
+
+    With mask=None this is the plain Algorithm-1 average. xs may have any rank
+    (multi-output solutions stack as (q, d, k)): the mask broadcasts on axis 0.
+    """
+    if mask is None:
+        return jnp.mean(xs, axis=0)
+    m = mask.astype(xs.dtype).reshape((xs.shape[0],) + (1,) * (xs.ndim - 1))
+    denom = jnp.maximum(jnp.sum(mask.astype(xs.dtype)), 1.0)
+    return jnp.sum(xs * m, axis=0) / denom
+
+
+def psum_average(x_local: jax.Array, mask_local: jax.Array, axis_name) -> jax.Array:
+    """Straggler-resilient average across a mesh axis (inside shard_map).
+
+    Workers that missed the deadline pass mask_local=0; their x_local is ignored and
+    the denominator is the realized worker count.
+    """
+    num = jax.lax.psum(x_local * mask_local, axis_name)
+    den = jax.lax.psum(mask_local, axis_name)
+    return num / jnp.maximum(den, 1.0)
+
+
+@dataclasses.dataclass
+class StreamingAverage:
+    """Incremental master: absorb worker outputs as they arrive (serverless mode).
+
+    Tracks the running mean and count; ``state`` is a pytree so it can live on-device.
+    """
+
+    mean: jax.Array
+    count: jax.Array
+
+    @classmethod
+    def init(cls, d: int, dtype=jnp.float32) -> "StreamingAverage":
+        return cls(mean=jnp.zeros((d,), dtype), count=jnp.zeros((), dtype))
+
+    def update(self, x: jax.Array) -> "StreamingAverage":
+        c = self.count + 1.0
+        return StreamingAverage(mean=self.mean + (x - self.mean) / c, count=c)
+
+
+jax.tree_util.register_pytree_node(
+    StreamingAverage,
+    lambda s: ((s.mean, s.count), None),
+    lambda _, c: StreamingAverage(*c),
+)
+
+
+def simulate_straggler_mask(
+    key: jax.Array, q: int, *, drop_prob: float = 0.0, deadline_quantile: float = 1.0
+) -> jax.Array:
+    """Simulate which of q workers made the deadline.
+
+    drop_prob models hard failures (lambda never returns); deadline_quantile models a
+    latency cutoff: worker runtimes ~ LogNormal and only the fastest fraction count.
+    Returns a float mask (q,) with 1.0 = arrived.
+    """
+    kd, kt = jax.random.split(key)
+    alive = jax.random.bernoulli(kd, 1.0 - drop_prob, (q,))
+    if deadline_quantile >= 1.0:
+        return alive.astype(jnp.float32)
+    t = jax.random.lognormal(kt, shape=(q,))
+    cutoff = jnp.quantile(t, deadline_quantile)
+    return (alive & (t <= cutoff)).astype(jnp.float32)

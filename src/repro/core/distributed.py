@@ -1,0 +1,144 @@
+"""Distributed sketch-and-solve over a JAX mesh (the paper's Algorithm 1 at pod scale).
+
+The q serverless workers become shards of one (or more) mesh axes. Each shard:
+  1. derives its own key (fold_in worker index) — workers are stateless i.i.d. copies,
+  2. sketches (A, b) → (S_kA, S_kb)   [master-sketch mode ships these; worker-sketch
+     mode computes them from replicated/broadcast A],
+  3. solves the m×d sub-problem locally,
+  4. contributes to a masked psum average (stragglers contribute 0 and shrink the
+     denominator — the estimator is Algorithm 1 with the realized q′).
+
+Two data-placement regimes:
+  * ``replicated``   — every worker sees all of A (the paper's setting; A replicated or
+    broadcast once, privacy mode has the master do step 2).
+  * ``row_sharded``  — beyond-paper: A is row-sharded across workers and each worker
+    sketches only its own rows (sampling-family sketches restricted to the local block,
+    scaled by the global n). The average is then over *local-block* estimators; this is
+    the divide-and-conquer ("local sketching") regime — biased in general but it never
+    moves raw rows across hosts, and for uniform-sampling sketches it is *identical in
+    distribution* to global uniform sampling when rows are exchangeable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import averaging, sketches as sk, solve
+from repro.utils import prng
+
+
+def _worker_index(axis_names) -> jax.Array:
+    """Linear worker index across (possibly multiple) mesh axes, inside shard_map."""
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def distributed_sketch_solve(
+    mesh: Mesh,
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    axis_names: tuple = ("data",),
+    reg: float = 0.0,
+    method: str = "qr",
+    straggler_mask: Optional[jax.Array] = None,
+    row_sharded: bool = False,
+    round_id: int = 0,
+):
+    """Algorithm 1 over ``mesh``: one sketch-and-solve worker per shard of axis_names.
+
+    Args:
+      straggler_mask: optional (q,) float mask of which workers made the deadline
+        (1=arrived). None = all arrived.
+      row_sharded: shard A's rows over the worker axes instead of replicating.
+    Returns:
+      x̄ (d,), replicated.
+    """
+    q = 1
+    for name in axis_names:
+        q *= mesh.shape[name]
+    if straggler_mask is None:
+        straggler_mask = jnp.ones((q,), jnp.float32)
+
+    a_spec = P(axis_names) if row_sharded else P()
+    in_specs = (P(), a_spec, P(), P())
+    out_specs = P()
+
+    def worker(key, A_blk, b_blk, mask_all):
+        widx = _worker_index(axis_names)
+        wkey = prng.worker_key(key, widx, round_id)
+        xk = solve.sketch_and_solve(spec, wkey, A_blk, b_blk, reg=reg, method=method)
+        mask = mask_all[widx]
+        num = jax.lax.psum(xk * mask, axis_names)
+        den = jax.lax.psum(mask, axis_names)
+        return num / jnp.maximum(den, 1.0)
+
+    fn = shard_map(worker, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return fn(key, A, b, straggler_mask)
+
+
+def distributed_sketch_least_norm(
+    mesh: Mesh,
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    axis_names: tuple = ("data",),
+    straggler_mask: Optional[jax.Array] = None,
+    round_id: int = 0,
+):
+    """§V right-sketch averaging over the mesh (n < d). A replicated."""
+    q = 1
+    for name in axis_names:
+        q *= mesh.shape[name]
+    if straggler_mask is None:
+        straggler_mask = jnp.ones((q,), jnp.float32)
+
+    def worker(key, A_rep, b_rep, mask_all):
+        widx = _worker_index(axis_names)
+        wkey = prng.worker_key(key, widx, round_id)
+        xk = solve.sketch_least_norm(spec, wkey, A_rep, b_rep)
+        mask = mask_all[widx]
+        num = jax.lax.psum(xk * mask, axis_names)
+        den = jax.lax.psum(mask, axis_names)
+        return num / jnp.maximum(den, 1.0)
+
+    fn = shard_map(worker, mesh=mesh, in_specs=(P(), P(), P(), P()), out_specs=P())
+    return fn(key, A, b, straggler_mask)
+
+
+def distributed_sketch_solve_multiround(
+    mesh: Mesh,
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    rounds: int,
+    axis_names: tuple = ("data",),
+    reg: float = 0.0,
+):
+    """Elastic scaling in time: run Algorithm 1 for ``rounds`` successive waves of
+    workers and average everything (effective q = rounds × mesh workers). Each wave
+    reuses the same devices but fresh i.i.d. sketches — exactly how the serverless
+    deployment keeps invoking new lambdas until the error target is met.
+
+    Each round folds its id into the worker keys, so round r is a fresh i.i.d. batch.
+    """
+    acc = None
+    for r in range(rounds):
+        xbar_r = distributed_sketch_solve(
+            mesh, spec, key, A, b, axis_names=axis_names, reg=reg, round_id=r
+        )
+        acc = xbar_r if acc is None else acc + (xbar_r - acc) / (r + 1.0)
+    return acc

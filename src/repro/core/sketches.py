@@ -1,0 +1,275 @@
+"""Randomized sketching operators (the paper's §II-§IV operator family).
+
+Every sketch ``S ∈ R^{m×n}`` here satisfies ``E[SᵀS] = I_n`` — the normalization the
+paper's theory (Lemmas 1-7) assumes. Sketches are applied *functionally*: given a PRNG
+key and a matrix ``A`` of shape ``(n, ...)`` they return ``S @ A`` of shape ``(m, ...)``
+without ever materializing ``S`` (except the Gaussian dense path, which also has an
+RNG-fused Pallas kernel that streams S tiles through VMEM — see ``repro.kernels``).
+
+Supported kinds (paper section in brackets):
+  * ``gaussian``       — i.i.d. N(0, 1/m)                                     [§III]
+  * ``srht``           — randomized Hadamard (ROS): sqrt(n/m)·P·(H/√n)·D      [§IV-A]
+  * ``uniform``        — uniform row sampling, with/without replacement       [§IV-B]
+  * ``leverage``       — leverage-score row sampling (exact or approximate)   [§IV-C]
+  * ``sjlt``           — sparse JL / CountSketch with ``s`` nonzeros per col  [§IV-D]
+  * ``hybrid``         — uniform-sample m' rows, then an inner sketch m'→m    [§IV-D]
+
+Design notes
+------------
+* ``SketchSpec`` is a frozen, hashable config — safe as a static jit argument.
+* To sketch ``A`` and ``b`` with the *same* S (as Algorithm 1 requires), concatenate
+  ``[A, b[:, None]]`` before sketching: :func:`sketch_data` does this.
+* SRHT pads n to the next power of two internally (zero rows of A contribute nothing;
+  E[SᵀS] restricted to the first n coordinates is still I_n by exchangeability of the
+  Hadamard/Rademacher construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- spec
+
+KINDS = ("gaussian", "srht", "uniform", "leverage", "sjlt", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Static description of a sketching operator.
+
+    Attributes:
+      kind: one of ``KINDS``.
+      m: sketch dimension (rows of S).
+      replacement: (uniform/leverage) sample with replacement. The paper's Lemma 5
+        covers both; without-replacement has strictly smaller bias.
+      s: (sjlt) nonzeros per column of S.
+      m_prime: (hybrid) intermediate uniform-sampling dimension, m <= m_prime <= n.
+      inner: (hybrid) kind of the second-stage sketch ("gaussian" or "sjlt").
+      use_kernel: route through the Pallas TPU kernels in ``repro.kernels`` where one
+        exists (interpret-mode on CPU).
+    """
+
+    kind: str
+    m: int
+    replacement: bool = True
+    s: int = 4
+    m_prime: int = 0
+    inner: str = "gaussian"
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown sketch kind {self.kind!r}; expected one of {KINDS}")
+        if self.m <= 0:
+            raise ValueError("sketch dimension m must be positive")
+        if self.kind == "hybrid":
+            if self.m_prime < self.m:
+                raise ValueError("hybrid sketch needs m_prime >= m")
+            if self.inner not in ("gaussian", "sjlt", "srht"):
+                raise ValueError(f"unsupported hybrid inner sketch {self.inner!r}")
+
+    def apply(self, key: jax.Array, A: jax.Array) -> jax.Array:
+        """Return ``S @ A`` where A has shape (n, ...)."""
+        return apply_sketch(self, key, A)
+
+
+# --------------------------------------------------------------------------- kinds
+
+
+def gaussian_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
+    """S with i.i.d. N(0, 1/m) entries. E[SᵀS] = I. Unbiased estimator (Lemma 1)."""
+    n = A.shape[0]
+    if use_kernel:
+        from repro.kernels.gaussian import ops as gops
+
+        return gops.gaussian_sketch(key, A, m)
+    S = jax.random.normal(key, (m, n), dtype=A.dtype) * (1.0 / math.sqrt(m))
+    return S @ A
+
+
+def _fwht(x: jax.Array) -> jax.Array:
+    """In-place-style iterative fast Walsh-Hadamard transform along axis 0.
+
+    x: (n, ...) with n a power of two. Returns H @ x with H the *unnormalized*
+    ±1 Hadamard matrix (HᵀH = n·I).
+    """
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"FWHT needs a power-of-two length, got {n}")
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, *x.shape[1:])
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(n, *x.shape[3:])
+        h *= 2
+    return x
+
+
+def next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def srht_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
+    """Randomized Hadamard (ROS) sketch: S = sqrt(n_pad/m) · P · (H/√n_pad) · D.
+
+    P samples m of n_pad rows uniformly with replacement (matching the paper's
+    Lemma 4 analysis, which assumes with-replacement sampling).
+    """
+    n = A.shape[0]
+    n_pad = next_pow2(n)
+    kd, kp = jax.random.split(key)
+    signs = jax.random.rademacher(kd, (n,), dtype=A.dtype)
+    DA = A * signs.reshape((n,) + (1,) * (A.ndim - 1))
+    if n_pad != n:
+        pad = [(0, n_pad - n)] + [(0, 0)] * (A.ndim - 1)
+        DA = jnp.pad(DA, pad)
+    if use_kernel:
+        from repro.kernels.fwht import ops as fops
+
+        HDA = fops.fwht(DA)
+    else:
+        HDA = _fwht(DA)
+    HDA = HDA * (1.0 / math.sqrt(n_pad))  # orthonormal H
+    rows = jax.random.randint(kp, (m,), 0, n_pad)
+    return jnp.take(HDA, rows, axis=0) * math.sqrt(n_pad / m)
+
+
+def uniform_sketch(
+    key: jax.Array, A: jax.Array, m: int, *, replacement: bool = True
+) -> jax.Array:
+    """Uniform row sampling, scaled so E[SᵀS] = I (each kept row × sqrt(n/m))."""
+    n = A.shape[0]
+    if replacement:
+        rows = jax.random.randint(key, (m,), 0, n)
+    else:
+        # Gumbel top-k trick == sampling without replacement, jit-friendly.
+        g = jax.random.gumbel(key, (n,))
+        rows = jax.lax.top_k(g, m)[1]
+    return jnp.take(A, rows, axis=0) * math.sqrt(n / m)
+
+
+def leverage_scores(A: jax.Array, *, method: str = "qr") -> jax.Array:
+    """Row leverage scores ℓ_i = ‖ũ_i‖² of A (sums to rank(A) = d)."""
+    if method == "svd":
+        U, _, _ = jnp.linalg.svd(A, full_matrices=False)
+        return jnp.sum(U * U, axis=1)
+    if method == "qr":
+        Q, _ = jnp.linalg.qr(A)
+        return jnp.sum(Q * Q, axis=1)
+    if method == "approx":
+        # Beyond-paper: sketched leverage scores (Drineas et al. 2012): compute R from
+        # a QR of an SRHT sketch of A, then ℓ̂_i = ‖a_iᵀ R⁻¹‖². O(nd log n + nd²) → O(nd·r).
+        n, d = A.shape
+        m = min(n, max(4 * d, 64))
+        SA = srht_sketch(jax.random.PRNGKey(0), A, m)
+        _, R = jnp.linalg.qr(SA)
+        AR = jax.scipy.linalg.solve_triangular(R.T, A.T, lower=True).T
+        return jnp.sum(AR * AR, axis=1)
+    raise ValueError(f"unknown leverage method {method!r}")
+
+
+def leverage_sketch(
+    key: jax.Array,
+    A: jax.Array,
+    m: int,
+    *,
+    scores: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Leverage-score sampling (paper §IV-C): P[row j] = ℓ_j / d, row scaled by
+    1/sqrt(m·p_j) so that E[SᵀS] = I. Sampling is with replacement (Lemma 6)."""
+    if scores is None:
+        scores = leverage_scores(A)
+    p = scores / jnp.sum(scores)
+    rows = jax.random.categorical(key, jnp.log(p + 1e-30), shape=(m,))
+    scale = 1.0 / jnp.sqrt(m * jnp.take(p, rows))
+    return jnp.take(A, rows, axis=0) * scale[(...,) + (None,) * (A.ndim - 1)]
+
+
+def sjlt_sketch(
+    key: jax.Array, A: jax.Array, m: int, *, s: int = 4, use_kernel: bool = False
+) -> jax.Array:
+    """Sparse Johnson-Lindenstrauss transform [Nelson & Nguyên].
+
+    Each column of S (i.e. each of the n input coordinates) gets ``s`` nonzeros,
+    value ±1/√s, in buckets chosen uniformly: (SA)_r = Σ_{i: h(i)∋r} σ_i/√s · A_i.
+    E[SᵀS] = I. s=1 is CountSketch.
+    """
+    n = A.shape[0]
+    if use_kernel:
+        from repro.kernels.sjlt import ops as sops
+
+        return sops.sjlt_sketch(key, A, m, s=s)
+    kb, ks = jax.random.split(key)
+    buckets = jax.random.randint(kb, (n, s), 0, m)  # (n, s)
+    signs = jax.random.rademacher(ks, (n, s), dtype=A.dtype) * (1.0 / math.sqrt(s))
+    flat_vals = (signs[..., None] * A[:, None, ...]).reshape((n * s,) + A.shape[1:])
+    out = jax.ops.segment_sum(flat_vals, buckets.reshape(-1), num_segments=m)
+    return out
+
+
+def hybrid_sketch(
+    key: jax.Array,
+    A: jax.Array,
+    m: int,
+    m_prime: int,
+    *,
+    inner: str = "gaussian",
+    s: int = 4,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Paper §IV-D: uniform-sample m' rows (the part a worker can afford to *read*),
+    then sketch m' → m with a better sketch (the part it can afford to *compute*)."""
+    k1, k2 = jax.random.split(key)
+    sampled = uniform_sketch(k1, A, m_prime, replacement=False)
+    if inner == "gaussian":
+        return gaussian_sketch(k2, sampled, m, use_kernel=use_kernel)
+    if inner == "sjlt":
+        return sjlt_sketch(k2, sampled, m, s=s, use_kernel=use_kernel)
+    if inner == "srht":
+        return srht_sketch(k2, sampled, m, use_kernel=use_kernel)
+    raise ValueError(f"unsupported hybrid inner sketch {inner!r}")
+
+
+# --------------------------------------------------------------------------- dispatch
+
+
+def apply_sketch(spec: SketchSpec, key: jax.Array, A: jax.Array) -> jax.Array:
+    """Apply the sketch described by ``spec`` along axis 0 of A."""
+    if spec.kind == "gaussian":
+        return gaussian_sketch(key, A, spec.m, use_kernel=spec.use_kernel)
+    if spec.kind == "srht":
+        return srht_sketch(key, A, spec.m, use_kernel=spec.use_kernel)
+    if spec.kind == "uniform":
+        return uniform_sketch(key, A, spec.m, replacement=spec.replacement)
+    if spec.kind == "leverage":
+        return leverage_sketch(key, A, spec.m)
+    if spec.kind == "sjlt":
+        return sjlt_sketch(key, A, spec.m, s=spec.s, use_kernel=spec.use_kernel)
+    if spec.kind == "hybrid":
+        return hybrid_sketch(
+            key, A, spec.m, spec.m_prime, inner=spec.inner, s=spec.s, use_kernel=spec.use_kernel
+        )
+    raise ValueError(spec.kind)
+
+
+def sketch_data(spec: SketchSpec, key: jax.Array, A: jax.Array, b: jax.Array):
+    """Sketch (A, b) with the *same* S (Algorithm 1): returns (SA, Sb).
+
+    b may be (n,) or (n, k) (multi-target least squares, e.g. one-hot labels)."""
+    bm = b if b.ndim == 2 else b[:, None]
+    d = A.shape[1]
+    SAb = apply_sketch(spec, key, jnp.concatenate([A, bm], axis=1))
+    Sb = SAb[:, d:]
+    return SAb[:, :d], (Sb if b.ndim == 2 else Sb[:, 0])
+
+
+def materialize(spec: SketchSpec, key: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    """Materialize S ∈ R^{m×n} explicitly (tests / small problems only): S = S @ I."""
+    return apply_sketch(spec, key, jnp.eye(n, dtype=dtype))

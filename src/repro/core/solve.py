@@ -1,0 +1,131 @@
+"""Local least-squares / least-norm solvers and sketch-and-solve (Algorithm 1 worker).
+
+The worker-side problem is tiny (m×d with m = O(d)), so direct dense factorizations are
+the right tool; CG is provided for the ill-conditioned / regularized path and as the
+building block of the iterative-Hessian-sketch baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketches as sk
+
+
+# --------------------------------------------------------------------------- direct
+
+
+def lstsq(A: jax.Array, b: jax.Array, *, reg: float = 0.0, method: str = "qr") -> jax.Array:
+    """argmin_x ‖Ax − b‖² + reg·‖x‖², A: (n, d), b: (n,) or (n, k)."""
+    if method == "qr":
+        if reg > 0.0:
+            d = A.shape[1]
+            A_aug = jnp.concatenate([A, jnp.sqrt(reg) * jnp.eye(d, dtype=A.dtype)], axis=0)
+            b_aug = jnp.concatenate(
+                [b, jnp.zeros((d,) + b.shape[1:], dtype=b.dtype)], axis=0
+            )
+            A, b = A_aug, b_aug
+        Q, R = jnp.linalg.qr(A)
+        return jax.scipy.linalg.solve_triangular(R, Q.T @ b, lower=False)
+    if method == "chol":
+        d = A.shape[1]
+        G = A.T @ A + reg * jnp.eye(d, dtype=A.dtype)
+        c = A.T @ b
+        L = jnp.linalg.cholesky(G)
+        y = jax.scipy.linalg.solve_triangular(L, c, lower=True)
+        return jax.scipy.linalg.solve_triangular(L.T, y, lower=False)
+    if method == "cg":
+        return _cg_normal(A, b, reg=reg)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _cg_normal(A: jax.Array, b: jax.Array, *, reg: float = 0.0, iters: int = 64) -> jax.Array:
+    """CG on the normal equations (AᵀA + reg·I)x = Aᵀb. Matrix-free."""
+
+    def mv(x):
+        return A.T @ (A @ x) + reg * x
+
+    rhs = A.T @ b
+    x0 = jnp.zeros_like(rhs)
+
+    def body(_, state):
+        x, r, p, rs = state
+        Ap = mv(p)
+        alpha = rs / (jnp.vdot(p, Ap) + 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rs_new = jnp.vdot(r, r)
+        p = r + (rs_new / (rs + 1e-30)) * p
+        return x, r, p, rs_new
+
+    r0 = rhs - mv(x0)
+    state = (x0, r0, r0, jnp.vdot(r0, r0))
+    x, *_ = jax.lax.fori_loop(0, iters, body, state)
+    return x
+
+
+def least_norm(A: jax.Array, b: jax.Array) -> jax.Array:
+    """min ‖x‖² s.t. Ax = b (n < d, full row rank): x = Aᵀ(AAᵀ)⁻¹b."""
+    G = A @ A.T
+    L = jnp.linalg.cholesky(G)
+    y = jax.scipy.linalg.solve_triangular(L, b, lower=True)
+    z = jax.scipy.linalg.solve_triangular(L.T, y, lower=False)
+    return A.T @ z
+
+
+# ----------------------------------------------------------------- sketch-and-solve
+
+
+def sketch_and_solve(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    reg: float = 0.0,
+    method: str = "qr",
+) -> jax.Array:
+    """One worker of Algorithm 1 (left sketch, n > d):
+    x̂ = argmin_x ‖S(Ax − b)‖² with S ~ spec."""
+    SA, Sb = sk.sketch_data(spec, key, A, b)
+    return lstsq(SA, Sb, reg=reg, method=method)
+
+
+def sketch_least_norm(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+) -> jax.Array:
+    """One worker of the right-sketch least-norm problem (§V, n < d):
+    ẑ = argmin ‖z‖² s.t. (ASᵀ)z = b;  x̂ = Sᵀẑ.
+
+    Implemented without materializing S: ASᵀ = (S Aᵀ)ᵀ and Sᵀẑ = (ẑᵀ S)ᵀ, where the
+    second product reuses the sketch applied to the m×m identity only when S has no
+    fast adjoint. For sampling-type sketches the adjoint is a cheap scatter; for
+    simplicity and because m is small, we apply S to [Aᵀ, I_d-free] via a single
+    sketch of Aᵀ and recover Sᵀẑ by sketching the standard basis lazily — in practice
+    (and in the paper) the right sketch is Gaussian, whose adjoint we materialize at
+    cost m·d (same cost as SAᵀ itself).
+    """
+    # SAt : (m, n) = S @ Aᵀ, and we need Sᵀ ẑ. Materializing S (m × d) is O(md) memory,
+    # acceptable because m = O(n) << d in the right-sketch regime.
+    d = A.shape[1]
+    S = sk.materialize(spec, key, d, dtype=A.dtype)  # (m, d)
+    M = A @ S.T  # (n, m)
+    z = least_norm(M, b)  # (m,)
+    return S.T @ z
+
+
+def residual_cost(A: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """f(x) = ‖Ax − b‖²."""
+    r = A @ x - b
+    return jnp.vdot(r, r).real
+
+
+def relative_error(A, b, x, fstar) -> jax.Array:
+    """(f(x) − f(x*)) / f(x*) — the paper's 'approximation error'."""
+    return (residual_cost(A, b, x) - fstar) / fstar

@@ -1,0 +1,14 @@
+"""Deterministic synthetic data: LM token streams + the paper's regression workloads.
+
+Every batch is a pure function of (seed, step[, shard]) — a restarted or replaced
+worker regenerates exactly the same data, which is what makes checkpoint-restart and
+elastic rescaling bitwise-reproducible (no data-loader state to save).
+"""
+from repro.data.tokens import lm_batch, lm_eval_batch
+from repro.data.regression import (
+    gaussian_regression,
+    student_t_regression,
+    airline_like,
+    emnist_like,
+)
+from repro.data.specs import input_specs, batch_shardings

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's "data loader".
+
+No allocation happens here: the dry-run lowers against these specs, so a 314B-param
+(arch × shape × mesh) cell costs compile time only.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.sharding import ShardingRules
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one (arch × shape) cell.
+
+    train/prefill: token batch (+ frontend stubs: VLM patch embeddings, whisper frame
+    embeddings). decode: one token per sequence + the scalar position (the KV cache is
+    a separate argument whose specs come from ``models.cache_shapes``).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.mode == "decode":
+        return {"tokens": f((B,), jnp.int32), "pos": f((), jnp.int32)}
+    specs = {
+        "tokens": f((B, S), jnp.int32),
+        "loss_mask": f((B, S), jnp.float32),
+    }
+    if shape.mode == "train":
+        specs["labels"] = f((B, S), jnp.int32)
+    if cfg.vlm:
+        specs["patches"] = f((B, cfg.num_image_tokens, cfg.vit_dim), dt)
+    if cfg.encdec:
+        specs["frames"] = f((B, cfg.enc_seq, cfg.d_model), dt)
+    return specs
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec, rules: ShardingRules):
+    """PartitionSpecs for the input batch: batch dim over dp, everything else local."""
+    dp = rules.resolve("dp")
+    if shape.mode == "decode":
+        return {"tokens": P(dp), "pos": P()}
+    specs = {"tokens": P(dp, None), "loss_mask": P(dp, None)}
+    if shape.mode == "train":
+        specs["labels"] = P(dp, None)
+    if cfg.vlm:
+        specs["patches"] = P(dp, None, None)
+    if cfg.encdec:
+        specs["frames"] = P(dp, None, None)
+    return specs
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, rules: ShardingRules):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), batch_pspecs(cfg, shape, rules)
+    )

@@ -1,0 +1,8 @@
+"""Distribution layer: sharding rules, collectives helpers, fault tolerance."""
+from repro.distributed.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    constrain,
+    param_pspecs,
+    named_shardings,
+)

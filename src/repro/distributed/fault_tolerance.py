@@ -1,0 +1,90 @@
+"""Fault tolerance & elasticity: the systems contract behind the paper's claims.
+
+The paper's computing model (i.i.d. serverless workers + a master that averages
+whatever arrived) is the *easy* case of fault tolerance; this module carries the same
+guarantees over to the stateful parts of the framework:
+
+  * ``StragglerPolicy``    — deadline-based masks for any psum-averaged quantity
+    (sketched solutions, DP gradients). Pure simulation on CPU; on a real deployment
+    the mask would come from a per-step heartbeat.
+  * ``elastic_restore``    — restore any checkpoint onto any mesh: leaves are stored
+    as global arrays, so q (and the mesh shape) may change between runs. Combined
+    with deterministic data (pure function of step) a rescaled job continues the
+    *same* optimization trajectory modulo DP-width-induced batch layout.
+  * ``HeartbeatMonitor``   — bookkeeping for worker liveness used by the trainer
+    demos: records per-step arrival times, derives masks, and reports straggler
+    statistics (the quantity Fig. 1's run-time captions measure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint import restore_checkpoint
+from repro.core.averaging import simulate_straggler_mask
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """How the master decides which workers count for this step's average."""
+
+    drop_prob: float = 0.0           # hard failures (worker never reports)
+    deadline_quantile: float = 1.0   # keep only the fastest fraction
+    seed: int = 0
+
+    def mask_for_step(self, step: int, q: int) -> jax.Array:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        return simulate_straggler_mask(
+            key, q, drop_prob=self.drop_prob, deadline_quantile=self.deadline_quantile
+        )
+
+
+class HeartbeatMonitor:
+    """Tracks simulated worker arrival times; produces masks + reports."""
+
+    def __init__(self, q: int, *, deadline: float):
+        self.q = q
+        self.deadline = deadline
+        self.arrivals: List[np.ndarray] = []
+
+    def record_step(self, runtimes: np.ndarray) -> np.ndarray:
+        """runtimes: (q,) seconds. Returns the 0/1 mask of on-time workers."""
+        self.arrivals.append(runtimes)
+        return (runtimes <= self.deadline).astype(np.float32)
+
+    def report(self) -> Dict[str, float]:
+        if not self.arrivals:
+            return {}
+        r = np.stack(self.arrivals)
+        on_time = (r <= self.deadline).mean()
+        return {
+            "steps": float(r.shape[0]),
+            "mean_runtime": float(r.mean()),
+            "p95_runtime": float(np.quantile(r, 0.95)),
+            "on_time_fraction": float(on_time),
+            "effective_q": float(on_time * self.q),
+        }
+
+
+def elastic_restore(
+    directory: str,
+    step: int,
+    like: PyTree,
+    mesh: Mesh,
+    pspecs: PyTree,
+) -> PyTree:
+    """Restore a checkpoint onto ``mesh`` (any shape/size — elastic rescale)."""
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: hasattr(x, "_normalized_spec") or type(x).__name__ == "PartitionSpec",
+    )
+    return restore_checkpoint(directory, step, like, shardings=shardings)

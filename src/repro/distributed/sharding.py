@@ -1,0 +1,230 @@
+"""Sharding rules: logical axes → mesh axes → PartitionSpecs for params & activations.
+
+The framework uses three logical axes:
+
+  * ``dp``     — data parallel (batch dim of activations). Maps to ("pod", "data") on
+                 the multi-pod mesh so the batch spreads over both; pure-DP across pods
+                 keeps the only cross-pod collective the gradient reduce (DCN-friendly).
+  * ``fsdp``   — fully-sharded parameter dim (ZeRO-3 style). Maps to "data": each layer
+                 is all-gathered just-in-time inside the layer scan, so per-device
+                 parameter memory is params/|data| + one layer.
+  * ``tensor`` — Megatron tensor parallelism (attention heads / FFN hidden / vocab /
+                 MoE expert-ffn hidden). Maps to "model".
+
+Param specs are assigned by *leaf path* pattern matching, which keeps the model code
+free of sharding annotations (the model only constrains activations via
+:func:`constrain`). Rules were chosen so every matmul has at most one sharded
+contraction operand → one reduce per projection, matching the Megatron schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis → mesh-axis mapping. ``None`` disables an axis (replicate)."""
+
+    dp: Tuple[str, ...] = ("data",)       # activation batch
+    fsdp: Any = "data"                    # parameter shard axis/axes (ZeRO-3); may
+    #                                       be a tuple ("pod","data") to span pods
+    tensor: Optional[str] = "model"       # Megatron TP axis
+    sequence_parallel: bool = True        # layer-boundary acts sharded (dp, tensor)
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "dp":
+            return self.dp if len(self.dp) > 1 else (self.dp[0] if self.dp else None)
+        if logical == "fsdp":
+            return self.fsdp
+        if logical == "tensor":
+            return self.tensor
+        if logical == "sp":
+            # sequence axis of activations: rides the tensor axis (Megatron-SP) so
+            # per-layer remat residuals and attention score tiles divide by |tensor|
+            return self.tensor if self.sequence_parallel else None
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical_axes) -> P:
+        return P(*[self.resolve(a) for a in logical_axes])
+
+
+DEFAULT_RULES = ShardingRules()
+REPLICATED_RULES = ShardingRules(dp=(), fsdp=None, tensor=None)
+
+
+def constrain(x: jax.Array, rules: Optional[ShardingRules], *logical_axes) -> jax.Array:
+    """with_sharding_constraint if rules are active (inside jit under a mesh);
+    identity when rules is None (single-device tests / examples).
+
+    (§Perf iter 5, refuted: wrapping this in ``optimization_barrier`` to pin the
+    resharding collectives to bf16 tensors changed NOTHING in the compiled
+    collective schedule — GSPMD places reshards during partitioning, before the
+    convert-motion passes a barrier could block. Reverted to keep fusion free.)"""
+    if rules is None:
+        return x
+    ndim_axes = list(logical_axes) + [None] * (x.ndim - len(logical_axes))
+    return jax.lax.with_sharding_constraint(x, rules.spec(*ndim_axes))
+
+
+# ------------------------------------------------------------------- param rules
+#
+# (regex on "/"-joined tree path, logical axes for the *trailing* dims of the leaf).
+# Leading unmatched dims (the stacked-layer axis L, MoE expert axis E) are replicated
+# unless the rule names them explicitly. First match wins.
+
+_PARAM_RULES = [
+    # embeddings: vocab-parallel (Megatron), fsdp on d
+    (r"embed/table$", ("tensor", "fsdp")),
+    (r"unembed/w$", ("fsdp", "tensor")),
+    (r"vit_proj/w$", (None, None)),
+    # attention (leaf shapes (L, d, H*hd) / (L, H*hd, d))
+    (r"attn/wq$", (None, "fsdp", "tensor")),
+    (r"attn/wk$", (None, "fsdp", "tensor")),
+    (r"attn/wv$", (None, "fsdp", "tensor")),
+    (r"attn/wo$", (None, "tensor", "fsdp")),
+    (r"xattn/wq$", (None, "fsdp", "tensor")),
+    (r"xattn/wk$", (None, "fsdp", "tensor")),
+    (r"xattn/wv$", (None, "fsdp", "tensor")),
+    (r"xattn/wo$", (None, "tensor", "fsdp")),
+    # MLA: low-rank downs replicated-ish (small), ups tensor-parallel on heads
+    (r"attn/w_dq$", (None, "fsdp", None)),
+    (r"attn/w_uq$", (None, None, "tensor")),
+    (r"attn/w_dkv$", (None, "fsdp", None)),
+    (r"attn/w_ukv$", (None, None, "tensor")),
+    # dense FFN (L, d, f) / (L, f, d)
+    (r"ffn/w_gate$", (None, "fsdp", "tensor")),
+    (r"ffn/w_up$", (None, "fsdp", "tensor")),
+    (r"ffn/w_down$", (None, "tensor", "fsdp")),
+    # MoE (L, E, d, f) / (L, E, f, d): TP over the expert-ffn hidden dim; experts
+    # stay whole (the sort-based dispatch never crosses the data shard).
+    (r"moe/router$", (None, "fsdp", None)),
+    (r"moe/w_gate$", (None, None, "fsdp", "tensor")),
+    (r"moe/w_up$", (None, None, "fsdp", "tensor")),
+    (r"moe/w_down$", (None, None, "tensor", "fsdp")),
+    # mamba (channel dim C = d_inner is the TP axis)
+    (r"mamba/in_proj$", (None, "fsdp", "tensor")),
+    (r"mamba/conv_w$", (None, None, "tensor")),
+    (r"mamba/conv_b$", (None, "tensor")),
+    (r"mamba/x_proj$", (None, "tensor", None)),
+    (r"mamba/dt_proj_w$", (None, None, "tensor")),
+    (r"mamba/dt_proj_b$", (None, "tensor")),
+    (r"mamba/A_log$", (None, "tensor", None)),
+    (r"mamba/D$", (None, "tensor")),
+    (r"mamba/out_proj$", (None, "tensor", "fsdp")),
+    # norms & everything small: replicated
+    (r".*", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_path(path_s: str, ndim: int, rules: ShardingRules) -> P:
+    """PartitionSpec for one leaf. Rules give trailing-dim axes; leading dims None."""
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path_s):
+            if logical is None:
+                return P()
+            axes = list(logical)
+            # encoder stacks reuse attn/ffn rules but may have the same ndim; pad or
+            # trim *leading* positions so trailing dims line up.
+            if len(axes) < ndim:
+                axes = [None] * (ndim - len(axes)) + axes
+            elif len(axes) > ndim:
+                axes = axes[len(axes) - ndim:]
+            resolved = [rules.resolve(a) for a in axes]
+            return P(*resolved)
+    return P()
+
+
+def param_pspecs(params_tree, rules: ShardingRules):
+    """Pytree of PartitionSpecs matching ``params_tree`` (arrays or ShapeDtypeStructs)."""
+    def leaf_spec(path, leaf):
+        return spec_for_path(_path_str(path), len(leaf.shape), rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def named_shardings(params_tree, mesh: Mesh, rules: ShardingRules):
+    """Pytree of NamedShardings for device_put / jit in_shardings."""
+    specs = param_pspecs(params_tree, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ------------------------------------------------------------------- cache rules
+
+
+def cache_pspecs(cache_tree, rules: ShardingRules, *, batch_sharded: bool):
+    """KV/state cache PartitionSpecs.
+
+    batch_sharded=True (decode_32k): batch dim → dp, *sequence* dim → tensor. The
+    decode softmax then reduces across model shards (flash-decode / split-KV style).
+    Sharding the KV-head dim instead would be illegal for most assigned archs
+    (kv_heads ∈ {2, 8} < |model| = 16) and sharding head_dim would split RoPE pairs.
+
+    batch_sharded=False (long_500k, batch=1): the sequence dim is sharded over
+    *every* mesh axis (dp + tensor — 256 or 512 ways); SSM states shard their channel
+    dim over tensor only (they have no sequence axis — that is the point of SSMs).
+
+    Cache leaf layouts (leading L = stacked layers):
+      k/v       (L, B, S, KV, hd)
+      ckv       (L, B, S, r)         (MLA latent)
+      krope     (L, B, S, rope_d)
+      conv      (L, B, K-1, C)       (mamba; C → tensor)
+      ssm       (L, B, C, N)
+      xk/xv     (L, B, S_enc, KV, hd)
+    """
+    dp = rules.resolve("dp")
+    tp = rules.resolve("tensor")
+
+    def _axes(*logical):
+        out = []
+        for a in logical:
+            if a is None:
+                continue
+            if isinstance(a, tuple):
+                out.extend(x for x in a if x)
+            else:
+                out.append(a)
+        return tuple(out) if out else None
+
+    seq_all = _axes(dp, tp)  # long-context: sequence over the whole mesh
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = len(leaf.shape)
+        if name in ("xk", "xv"):
+            # whisper cross-attn cache: S_enc = 1500 is not shard-divisible and the
+            # tensor is small — shard batch only.
+            return P(None, dp if batch_sharded else None, None, None, None)
+        if name in ("k", "v"):
+            if batch_sharded:
+                return P(None, dp, tp, None, None)
+            return P(None, None, seq_all, None, None)
+        if name in ("ckv", "krope"):
+            if batch_sharded:
+                return P(None, dp, tp, None)
+            return P(None, None, seq_all, None)
+        if name == "conv":
+            return P(None, dp if batch_sharded else None, None, tp)
+        if name == "ssm":
+            return P(None, dp if batch_sharded else None, tp, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's three sketching hot spots.
+
+The paper's compute cost is dominated by *applying* the sketch (S·A): the Hadamard
+transform of the ROS sketch, the sparse scatter of SJLT, and the dense Gaussian
+projection. Each kernel ships as:
+
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, grid choice, PRNG plumbing)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+All kernels are validated in interpret=True mode on CPU (this container) and written
+against TPU v5e constraints (last-dim 128 lanes, MXU-shaped matmuls, VMEM budgets).
+"""
+from repro.kernels import fwht, sjlt, gaussian

@@ -1,0 +1,78 @@
+"""Shared kernel utilities: in-kernel counter RNG and Hadamard generators.
+
+threefry2x32 is hand-rolled with uint32 jnp ops (shifts/xors/adds) because
+``pltpu.prng_*`` has no interpret-mode lowering on CPU; a counter-based RNG is also
+exactly what we want architecturally — tile (i, j) of the random sketch is a pure
+function of (key, i, j), so grid order, multi-pod sharding, and checkpoint/restart all
+reproduce identical sketches with zero coordination.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+_ROT = (13, 15, 26, 6, 17, 29, 16, 24)
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def _rotl(x: jax.Array, r: int) -> jax.Array:
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def threefry2x32(k0: jax.Array, k1: jax.Array, c0: jax.Array, c1: jax.Array):
+    """Standard 20-round Threefry-2x32. All args uint32 (broadcastable). Returns
+    two uint32 streams with the shapes of (c0, c1)."""
+    ks = (k0, k1, k0 ^ k1 ^ _PARITY)
+    x0 = c0 + ks[0]
+    x1 = c1 + ks[1]
+    for block in range(5):
+        for r in range(4):
+            x0 = x0 + x1
+            x1 = _rotl(x1, _ROT[(block % 2) * 4 + r])
+            x1 = x1 ^ x0
+        inj = block + 1
+        x0 = x0 + ks[inj % 3]
+        x1 = x1 + ks[(inj + 1) % 3] + np.uint32(inj)
+    return x0, x1
+
+
+def bits_to_open_unit(bits: jax.Array) -> jax.Array:
+    """uint32 -> float32 in (0, 1), strictly positive so log() is finite."""
+    return (bits.astype(jnp.float32) + 0.5) * jnp.float32(2.0**-32)
+
+
+def counter_normal(k0, k1, c0, c1):
+    """One standard normal per counter pair via threefry + Box-Muller (cos branch)."""
+    b0, b1 = threefry2x32(k0, k1, c0, c1)
+    u1 = bits_to_open_unit(b0)
+    u2 = bits_to_open_unit(b1)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(jnp.float32(2.0 * np.pi) * u2)
+
+
+def key_to_words(key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Extract the two uint32 words of a jax PRNG key."""
+    data = jax.random.key_data(key).astype(jnp.uint32).reshape(-1)
+    return data[0], data[1]
+
+
+def hadamard_matrix(k: int, dtype=jnp.float32) -> jax.Array:
+    """Unnormalized k×k Hadamard (Sylvester): H[i,j] = (-1)^popcount(i&j), k pow2."""
+    if k & (k - 1):
+        raise ValueError(f"Hadamard size must be a power of two, got {k}")
+    i = np.arange(k)[:, None] & np.arange(k)[None, :]
+    signs = 1 - 2 * (np.bitwise_count(i.astype(np.uint64)).astype(np.int32) & 1)
+    return jnp.asarray(signs, dtype=dtype)
+
+
+def pad_axis_to(x: jax.Array, axis: int, target: int) -> jax.Array:
+    if x.shape[axis] == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pads)
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,2 @@
+from repro.kernels.fwht import ops, ref
+from repro.kernels.fwht.ops import fwht

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: Walsh-Hadamard transform of a VMEM-resident row tile.
+
+TPU adaptation (vs. the GPU/CPU butterfly loop): we *matmul* with small Hadamard
+matrices so the MXU does the work. A tile of R rows is factored R = B · 128 and
+
+    H_R = H_B ⊗ H_128    (Sylvester / Kronecker identity)
+
+so the transform is two MXU matmuls per tile:
+    t[J, i, D] = Σ_j H_128[i, j] · x[J, j, D]          (within 128-row groups)
+    y[I, i, D] = Σ_J H_B[I, J]  · t[J, i, D]           (across the B groups)
+
+FLOP cost is R·128 + R·B multiplies per element instead of R·log₂R adds — on paper
+worse, but it is dense 128-aligned MXU work instead of lane-hostile shuffles, and the
+tile stays in VMEM for both passes. Tiles larger than one VMEM block are handled by
+the Kronecker factorization one level up, in ops.py (grid pass 1: within-tile; grid
+pass 2: across tiles on a reshaped view — same kernel both times).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_tile_kernel(h_outer_ref, h_inner_ref, x_ref, o_ref):
+    """One (R, DB) tile: y = (H_B ⊗ H_128) @ x, both factors as MXU matmuls."""
+    x = x_ref[...]
+    rows, db = x.shape
+    k = h_inner_ref.shape[0]  # inner Hadamard size (<= 128 only when rows < 128)
+    b = rows // k
+    hi = h_inner_ref[...]
+    x = x.reshape(b, k, db)
+    t = jax.lax.dot_general(
+        hi, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (k_out, b, db) with dims (i, J, D)
+    t = jnp.transpose(t, (1, 0, 2))  # (J=b, i=k, D)
+    if b > 1:
+        ho = h_outer_ref[...]
+        t2 = t.reshape(b, k * db)
+        y = jnp.dot(ho, t2, preferred_element_type=jnp.float32)  # (I=b, k*db)
+        o_ref[...] = y.reshape(rows, db).astype(o_ref.dtype)
+    else:
+        o_ref[...] = t.reshape(rows, db).astype(o_ref.dtype)
+
+
+def fwht_tiles(
+    x: jax.Array,
+    h_outer: jax.Array,
+    h_inner: jax.Array,
+    *,
+    tile_rows: int,
+    block_d: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply H_{tile_rows} independently to each contiguous group of tile_rows rows.
+
+    x: (n, d) with n % tile_rows == 0 and d % block_d == 0.
+    h_inner: (k, k) with k = min(128, tile_rows); h_outer: (tile_rows//k,)².
+    """
+    n, d = x.shape
+    assert n % tile_rows == 0 and d % block_d == 0, (n, d, tile_rows, block_d)
+    grid = (n // tile_rows, d // block_d)
+    return pl.pallas_call(
+        _fwht_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(h_outer.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(h_inner.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((tile_rows, block_d), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(h_outer, h_inner, x)

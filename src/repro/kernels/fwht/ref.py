@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the blocked Walsh-Hadamard transform."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized Walsh-Hadamard transform along axis 0 (HᵀH = n·I).
+
+    x: (n, ...) with n a power of two. Iterative radix-2 butterflies.
+    """
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"FWHT needs power-of-two length, got {n}")
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, *x.shape[1:])
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(n, *x.shape[3:])
+        h *= 2
+    return x

@@ -1,0 +1,2 @@
+from repro.kernels.gaussian import ops, ref
+from repro.kernels.gaussian.ops import gaussian_sketch

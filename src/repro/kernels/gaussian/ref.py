@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RNG-fused Gaussian sketch.
+
+Materializes the same counter-derived S the kernel generates tile-by-tile (same
+threefry2x32 + Box-Muller stream, element (i, j) keyed by counters (i, j)), then does
+a plain matmul. The kernel must match this to float precision.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+
+
+def sketch_matrix(key: jax.Array, m: int, n: int) -> jax.Array:
+    """The full S ∈ R^{m×n} with entries N(0, 1/m) from the counter stream."""
+    k0, k1 = common.key_to_words(key)
+    rows = jnp.arange(m, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(n, dtype=jnp.uint32)[None, :]
+    z = common.counter_normal(k0, k1, jnp.broadcast_to(rows, (m, n)), jnp.broadcast_to(cols, (m, n)))
+    return z * jnp.float32(1.0 / math.sqrt(m))
+
+
+def gaussian_sketch(key: jax.Array, A: jax.Array, m: int) -> jax.Array:
+    S = sketch_matrix(key, m, A.shape[0])
+    return (S @ A.astype(jnp.float32)).astype(A.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.sjlt import ops, ref
+from repro.kernels.sjlt.ops import sjlt_apply, sjlt_sketch

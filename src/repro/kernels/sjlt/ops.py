@@ -1,0 +1,78 @@
+"""Public SJLT ops: parameter generation + padded kernel dispatch."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.sjlt import kernel as K
+from repro.kernels.sjlt import ref as R
+
+BLOCK_M = 512
+BLOCK_N = 256
+BLOCK_D = 256
+
+
+def sjlt_params(key: jax.Array, n: int, s: int, m: int, dtype=jnp.float32):
+    """Bucket indices and ±1/√s signs — the (only) randomness of the sketch.
+
+    Identical sampling to ``repro.core.sketches.sjlt_sketch`` so the kernel and the
+    pure-jnp path draw the same S for the same key.
+    """
+    kb, ks = jax.random.split(key)
+    buckets = jax.random.randint(kb, (n, s), 0, m)
+    signs = jax.random.rademacher(ks, (n, s), dtype=dtype) * (1.0 / math.sqrt(s))
+    return buckets, signs
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret", "use_ref"))
+def sjlt_apply(
+    A: jax.Array,
+    buckets: jax.Array,
+    signs: jax.Array,
+    m: int,
+    *,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """S @ A for the SJLT defined by (buckets, signs). A: (n, d) -> (m, d)."""
+    if use_ref:
+        return R.sjlt_apply(A, buckets, signs, m)
+    n, d = A.shape
+    s = buckets.shape[1]
+    dtype = A.dtype
+
+    bm = min(BLOCK_M, common.round_up(m, 128))
+    bn = min(BLOCK_N, common.round_up(n, 8))
+    bd = min(BLOCK_D, common.round_up(d, 128))
+    m_pad = common.round_up(m, bm)
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, bd)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    # Padded (fictitious) input rows must not contribute: route them to bucket -1,
+    # which no m-tile's local iota can match.
+    buckets_p = common.pad_axis_to(buckets + 1, 0, n_pad) - 1
+    signs_p = common.pad_axis_to(signs.astype(jnp.float32), 0, n_pad)
+
+    out = K.sjlt_tiles(
+        Af, buckets_p, signs_p, m_pad, block_m=bm, block_n=bn, block_d=bd, interpret=interpret
+    )
+    return out[:m, :d].astype(dtype)
+
+
+def sjlt_sketch(
+    key: jax.Array, A: jax.Array, m: int, *, s: int = 4, interpret: bool = True
+) -> jax.Array:
+    """Draw SJLT params from ``key`` and apply via the kernel."""
+    buckets, signs = sjlt_params(key, A.shape[0], s, m, dtype=jnp.float32)
+    return sjlt_apply(A, buckets, signs, m, interpret=interpret)
+
+
+def flops_and_bytes(n: int, d: int, m: int, s: int) -> dict:
+    """Structural cost: the kernel is a (n·s, m)×(n·s, d) accumulation walked in
+    m-tiles; useful-work view is 2·n·s·d MACs (each nonzero touches d values)."""
+    return {"flops": 2 * n * s * d, "bytes": 4 * (n * d + m * d + n * s * 2)}

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the SJLT (sparse JL / CountSketch) apply."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sjlt_apply(A: jax.Array, buckets: jax.Array, signs: jax.Array, m: int) -> jax.Array:
+    """(SA) where S has, for input coordinate i, nonzeros ``signs[i, t]`` in rows
+    ``buckets[i, t]`` (t < s). A: (n, d); buckets/signs: (n, s). Returns (m, d)."""
+    n, s = buckets.shape
+    vals = signs[..., None] * A[:, None, :]              # (n, s, d)
+    flat = vals.reshape(n * s, A.shape[1])
+    return jax.ops.segment_sum(flat, buckets.reshape(-1), num_segments=m)

@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init. The
+# 512 host devices exist ONLY for this dry-run process — tests/benches see 1 device.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config, shape_applicable
+from repro.configs import ASSIGNED
+from repro.data.specs import input_specs, batch_pspecs
+from repro.distributed.sharding import ShardingRules, cache_pspecs, param_pspecs
+from repro.launch.mesh import make_production_mesh, production_rules
+from repro.models import lm
+from repro.optim import AdamWConfig
+from repro.roofline import collectives as C
+from repro.roofline.hw import V5E
+from repro.roofline.model import extrapolate as _extrapolate_rl, extrapolate_cell, model_flops_for
+from repro.train.state import train_state_shapes, train_state_pspecs
+from repro.train.step import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production meshes.
+
+Two lowerings per cell:
+
+  * **exec form** — rolled scans, production chunk sizes: `memory_analysis()` proves
+    the step fits per-device HBM (buffer reuse across scan trips is real here).
+  * **analysis forms** — XLA's HLO cost analysis counts a `while` body ONCE, so the
+    exec form under-reports FLOPs/bytes/collectives by ~L. We therefore compile two
+    depth-reduced, fully-unrolled variants (L1, L2 layers, single-trip chunk sizes)
+    and extrapolate linearly in L:  total(L) = f(L1) + (f(L2)-f(L1))/(L2-L1)·(L-L1).
+    These lowerings are never executed, so their tile sizes don't matter.
+
+Per-arch tuning knobs (accum_steps, moment_dtype, remat) live in ``TRAIN_TUNING`` —
+these are the levers §Perf hillclimbs.
+"""
+
+
+@dataclasses.dataclass
+class TrainTuning:
+    accum_steps: int = 1
+    moment_dtype: str = "float32"
+    remat: str = "full"
+    loss_chunk: int = 512
+    attn_chunk: int = 1024
+    ssm_chunk: int = 128
+    accum_dtype: str = "float32"
+
+
+TRAIN_TUNING: Dict[str, TrainTuning] = {
+    # grok-314b cannot hold f32 moments (9.8 GB/chip) plus activations in 16 GB;
+    # the f32 accum buffer alone is 4.9 GB/chip -> bf16 accumulation
+    "grok-1-314b": TrainTuning(accum_steps=16, moment_dtype="bfloat16", accum_dtype="bfloat16"),
+    "pixtral-12b": TrainTuning(accum_steps=2),
+    "gemma3-12b": TrainTuning(accum_steps=2),
+    "mixtral-8x7b": TrainTuning(accum_steps=4),
+    # SSM archs: the fused scan bounds live tensors to O(chunk); accum halves the rest
+    "falcon-mamba-7b": TrainTuning(accum_steps=2, ssm_chunk=64),
+    "hymba-1.5b": TrainTuning(accum_steps=2, ssm_chunk=64),
+}
+
+# Archs whose parameter+optimizer footprint needs FSDP to span the pod axis on the
+# multi-pod mesh (512-way instead of 256-way parameter sharding).
+POD_FSDP_ARCHS = {"grok-1-314b"}
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def _named(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _analysis_depths(cfg: ArchConfig) -> Tuple[int, int]:
+    if cfg.attn_kind == "local_global" and cfg.local_global_ratio > 0:
+        p = cfg.local_global_ratio + 1
+        return p, 2 * p
+    return 1, 2
+
+
+def _with_depth(cfg: ArchConfig, L: int) -> ArchConfig:
+    changes = {"num_layers": L}
+    if cfg.encdec:
+        changes["enc_layers"] = L
+    return dataclasses.replace(cfg, **changes)
+
+
+def _lower(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, rules: ShardingRules,
+           tuning: TrainTuning, plan: lm.ExecPlan, accum_steps: int):
+    """Build the jitted-and-lowered artifact for one (cfg-variant, shape)."""
+    if shape.mode == "train":
+        opt_cfg = AdamWConfig(moment_dtype=tuning.moment_dtype)
+        step = make_train_step(
+            cfg, opt_cfg, rules=rules, plan=plan, accum_steps=accum_steps,
+            accum_dtype=tuning.accum_dtype,
+        )
+        state_shapes = train_state_shapes(cfg, opt_cfg)
+        state_sh = _named(mesh, train_state_pspecs(cfg, opt_cfg, rules))
+        bspecs = input_specs(cfg, shape)
+        batch_sh = _named(mesh, batch_pspecs(cfg, shape, rules))
+        return jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        ).lower(state_shapes, bspecs)
+    if shape.mode == "prefill":
+        pshapes = lm.param_shapes(cfg)
+        params_sh = _named(mesh, param_pspecs(pshapes, rules))
+        bspecs = input_specs(cfg, shape)
+        batch_sh = _named(mesh, batch_pspecs(cfg, shape, rules))
+
+        def prefill_fn(params, batch):
+            return lm.batched_prefill(params, cfg, batch, cache_len=shape.seq_len, rules=rules, plan=plan)
+
+        cache_struct = jax.eval_shape(prefill_fn, pshapes, bspecs)[1]
+        cache_sh = _named(mesh, cache_pspecs(cache_struct, rules, batch_sharded=True))
+        return jax.jit(
+            prefill_fn,
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(None, cache_sh),
+        ).lower(pshapes, bspecs)
+    # decode
+    pshapes = lm.param_shapes(cfg)
+    params_sh = _named(mesh, param_pspecs(pshapes, rules))
+    cache_struct = lm.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    batch_sharded = shape.global_batch > 1
+    cache_sh = _named(mesh, cache_pspecs(cache_struct, rules, batch_sharded=batch_sharded))
+    bspecs = input_specs(cfg, shape)
+    dp = rules.resolve("dp")
+    tok_sh = NamedSharding(mesh, P(dp if batch_sharded else None))
+    pos_sh = NamedSharding(mesh, P())
+
+    def decode_fn(params, cache, tokens, pos):
+        return lm.decode_step(params, cfg, tokens, cache, pos, rules=rules, plan=plan)
+
+    return jax.jit(
+        decode_fn,
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    ).lower(pshapes, cache_struct, bspecs["tokens"], bspecs["pos"])
+
+
+def _collective_agg(hlo: str, pod_size: Optional[int]) -> Dict[str, Dict[str, float]]:
+    ops = C.parse_collectives(hlo, pod_size=pod_size)
+    agg: Dict[str, Dict[str, float]] = {}
+    for op in ops:
+        e = agg.setdefault(op.kind, {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0, "dcn_wire_bytes": 0.0})
+        wb = C.op_wire_bytes(op)
+        e["count"] += 1
+        e["bytes"] += op.bytes
+        e["wire_bytes"] += wb
+        if op.crosses_pod:
+            e["dcn_wire_bytes"] += wb
+    return agg
+
+
+_extrapolate = _extrapolate_rl
+_extrapolate_cell = extrapolate_cell
+
+
+def _collective_seconds(agg) -> Dict[str, float]:
+    total_s = dcn_s = wire = 0.0
+    for kind, e in agg.items():
+        ici_bytes = e["wire_bytes"] - e["dcn_wire_bytes"]
+        t = ici_bytes / V5E.ici_link_bw + e["dcn_wire_bytes"] / V5E.dcn_bw
+        total_s += t
+        dcn_s += e["dcn_wire_bytes"] / V5E.dcn_bw
+        wire += e["wire_bytes"]
+    return {"total_s": total_s, "dcn_s": dcn_s, "wire_bytes": wire}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               tuning: Optional[TrainTuning] = None,
+               rules_override: Optional[ShardingRules] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    base = {"arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod)}
+    if not ok:
+        return {**base, "status": "SKIP", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_override or production_rules(multi_pod=multi_pod)
+    if multi_pod and arch in POD_FSDP_ARCHS and rules_override is None:
+        # 314B-class params don't fit a single pod's HBM alongside optimizer state:
+        # span FSDP across pods (ZeRO-3 over DCN — param gathers ride the pod axis).
+        rules = dataclasses.replace(rules, fsdp=("pod", "data"))
+    chips = mesh.size
+    tuning = tuning or TRAIN_TUNING.get(arch, TrainTuning())
+    pod_size = 256 if multi_pod else None
+
+    with mesh:
+        # ---------------- exec form: memory truth
+        exec_plan = lm.ExecPlan(
+            attn_chunk=tuning.attn_chunk,
+            loss_chunk=tuning.loss_chunk,
+            ssm_chunk=tuning.ssm_chunk,
+            remat=tuning.remat,
+        )
+        t0 = time.time()
+        lowered = _lower(cfg, shape, mesh, rules, tuning, exec_plan, tuning.accum_steps)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes": int(ma.peak_memory_in_bytes),
+        }
+        live = mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"] - mem["alias_bytes"]
+        fits = live <= V5E.hbm_bytes
+        del compiled, lowered
+
+        # ---------------- analysis forms: cost truth (unrolled, depth-extrapolated)
+        L1, L2 = _analysis_depths(cfg)
+        L = cfg.num_layers
+        a_plan = lm.analysis_plan(shape.seq_len, remat=tuning.remat)
+        costs, aggs = [], []
+        for Lk in (L1, L2):
+            cfg_k = _with_depth(cfg, Lk)
+            low_k = _lower(cfg_k, shape, mesh, rules, tuning, a_plan, 1)
+            comp_k = low_k.compile()
+            costs.append(dict(comp_k.cost_analysis()))
+            aggs.append(_collective_agg(comp_k.as_text(), pod_size))
+            del comp_k, low_k
+        cost, agg = _extrapolate_cell(costs[0], costs[1], aggs[0], aggs[1], L1, L2, L)
+
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = _collective_seconds(agg)
+    compute_s = flops / V5E.peak_flops_bf16
+    memory_s = nbytes / V5E.hbm_bw
+    collective_s = coll["total_s"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mf = model_flops_for(cfg, shape, mode=shape.mode)
+    return {
+        **base,
+        "status": "OK",
+        "chips": chips,
+        "mode": shape.mode,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "fits_16gb_hbm": bool(fits),
+        "cost": cost,
+        "collectives": agg,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "bottleneck": bottleneck,
+            "step_s": step_s,
+            "model_flops": mf,
+            "useful_fraction": mf / max(flops * chips, 1.0),
+            "roofline_fraction": compute_s / step_s if step_s > 0 else 0.0,
+            "collective_detail": coll,
+        },
+        "tuning": dataclasses.asdict(tuning) if shape.mode == "train" else None,
+    }
+
+
+def run_cells(archs, shapes, meshes, out_dir: str, *, resume: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                multi_pod = mesh_name == "multi"
+                tag = f"{arch}_{shape_name}_{_mesh_tag(multi_pod)}"
+                path = os.path.join(out_dir, tag + ".json")
+                if resume and os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    print(f"[dryrun] {tag}: cached ({rec['status']})", flush=True)
+                    results.append(rec)
+                    continue
+                print(f"[dryrun] {tag}: lowering...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, multi_pod=multi_pod)
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+                        "status": "FAIL",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "OK":
+                    m, r = rec["memory"], rec["roofline"]
+                    print(
+                        f"[dryrun] {tag}: OK compile={rec['compile_s']}s "
+                        f"args={m['argument_bytes']/2**30:.2f}GiB temp={m['temp_bytes']/2**30:.2f}GiB "
+                        f"fits={rec['fits_16gb_hbm']} bottleneck={r['bottleneck']} "
+                        f"terms=({r['compute_s']*1e3:.1f},{r['memory_s']*1e3:.1f},{r['collective_s']*1e3:.1f})ms "
+                        f"useful={r['useful_fraction']:.2f} roofline={r['roofline_fraction']:.2f}",
+                        flush=True,
+                    )
+                else:
+                    print(f"[dryrun] {tag}: {rec['status']} {rec.get('reason', rec.get('error',''))}", flush=True)
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_DIR))
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run_cells(archs, shapes, meshes, args.out, resume=not args.no_resume)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"[dryrun] done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL of {len(results)}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Functions (not module constants) so importing this file never touches jax device
+state — the dry-run must set XLA_FLAGS before the first device query.
+
+Mesh shapes (TPU v5e target):
+  * single pod : (16, 16)    axes ("data", "model")   = 256 chips
+  * multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+Axis roles: the batch shards over ("pod", "data") — pure DP across pods keeps the
+only cross-pod (DCN) collective the gradient reduce; "model" carries Megatron TP
+within a pod's ICI domain. FSDP (ZeRO-3 parameter sharding) rides the "data" axis.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_rules(*, multi_pod: bool = False) -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(dp=dp, fsdp="data", tensor="model")
+
+
+def make_smoke_mesh(n_devices: int = 0) -> Mesh:
+    """A tiny mesh over whatever devices exist (tests; 1 device -> (1,1))."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

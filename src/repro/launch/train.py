@@ -1,0 +1,60 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--reduced]``.
+
+On this CPU container it trains reduced configs end-to-end (the examples use it);
+pointed at a real TPU slice it builds the production mesh and shards per
+``distributed.sharding`` — the code path is identical, only the mesh differs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs.base import get_config
+from repro.optim import AdamWConfig
+from repro.optim.schedules import linear_warmup_cosine
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="CPU-size config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opt_cfg = AdamWConfig(lr=args.lr)
+    tc = TrainerConfig(
+        seed=args.seed,
+        batch=args.batch,
+        seq=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        accum_steps=args.accum,
+        log_every=max(1, args.steps // 20),
+    )
+    schedule = linear_warmup_cosine(max(1, args.steps // 10), args.steps)
+    trainer = Trainer(cfg, opt_cfg, tc, schedule=schedule)
+
+    t0 = time.time()
+    state = trainer.run(args.steps)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} steps={args.steps} wall={dt:.1f}s")
+    for h in trainer.history:
+        print("  " + " ".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}" for k, v in h.items()))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

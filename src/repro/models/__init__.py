@@ -1,0 +1,12 @@
+"""Model zoo: functional layers + one assembly module covering all assigned archs."""
+from repro.models.lm import (
+    init_params,
+    param_shapes,
+    lm_loss,
+    forward_logits,
+    init_cache,
+    cache_shapes,
+    decode_step,
+    prefill,
+    layer_windows,
+)

@@ -1,0 +1,372 @@
+"""Attention: GQA / MLA / sliding-window, chunked-flash for long context, and
+single-token decode against a KV cache.
+
+Memory strategy: training/prefill attention is *chunked flash* — an online-softmax
+scan over key blocks — so peak memory is O(S·chunk) instead of O(S²); at 32k prefill
+a dense score tensor would be ~8 GiB/device and is a non-starter. Decode attention is
+one-token-vs-cache einsums; when the cache's sequence axis is sharded (long_500k),
+the softmax reduction spans shards and GSPMD inserts the cross-shard all-reduce of the
+running (max, sum) pair.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def _dense(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape) * (1.0 / math.sqrt(fan_in))).astype(dtype)
+
+
+def _window_mask(q_pos, k_pos, window):
+    """(Sq, Sk) bool window mask; ``window`` may be a static int or a traced scalar
+    (per-layer meta inside a lax.scan — gemma3's 5:1 local:global stack). window<=0
+    means 'no window' (full attention)."""
+    if isinstance(window, int):
+        if window <= 0:
+            return None
+        return q_pos[:, None] - k_pos[None, :] < window
+    return (q_pos[:, None] - k_pos[None, :] < window) | (window <= 0)
+
+
+# ------------------------------------------------------------------ GQA params
+
+
+def init_gqa(key, d: int, heads: int, kv_heads: int, head_dim: int, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _dense(kq, (d, heads * head_dim), d, dtype),
+        "wk": _dense(kk, (d, kv_heads * head_dim), d, dtype),
+        "wv": _dense(kv, (d, kv_heads * head_dim), d, dtype),
+        "wo": _dense(ko, (heads * head_dim, d), heads * head_dim, dtype),
+    }
+
+
+# ------------------------------------------------------------------ flash core
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+    rules=None,
+) -> jax.Array:
+    """Online-softmax attention. q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).
+
+    GQA is handled by reshaping H into (KV, H//KV) groups. ``window > 0`` restricts
+    each query to the last ``window`` keys (sliding-window attention). ``q_offset``
+    is the absolute position of q[0] relative to k[0] (for cross-chunk prefill).
+
+    Sequence-parallel: queries (and therefore scores/accumulators — the O(S·chunk)
+    term) are sharded over the tensor axis on Sq; K/V chunks are replicated. This
+    works for *any* head count (minicpm3's 40 heads don't divide a 16-way mesh, so
+    head-sharding the f32 score tile is not an option there).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]  # MLA: value head dim differs from the (nope+rope) qk dim
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    # Constrain BEFORE the f32 upcast: the TP→SP transition (an all-to-all in the
+    # compiled HLO) then moves bf16, not f32 — half the wire bytes (§Perf iter 3).
+    q = constrain(q.reshape(B, Sq, KV, G, hd), rules, "dp", "sp", None, None, None)
+    qf = (q * scale).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    n_chunks = -(-Sk // chunk)
+    Sk_pad = n_chunks * chunk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+    kc = kf.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = vf.reshape(B, n_chunks, chunk, KV, hd_v).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = xs
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qf, kj)  # (B, Sq, KV, G, chunk)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        wm = _window_mask(q_pos, k_pos, window)
+        if wm is not None:
+            mask &= wm
+        mask &= (k_pos < Sk)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        l_corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * l_corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckh->bqkgh", p, vj)
+        acc = acc * l_corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ GQA forward
+
+
+def gqa_forward(
+    params: dict,
+    x: jax.Array,
+    *,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    rope_fraction: float = 1.0,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    kv_source: Optional[jax.Array] = None,
+    return_kv: bool = False,
+    rules=None,
+):
+    """Self (or cross, via kv_source) attention over x: (B, S, d).
+
+    return_kv=True additionally returns the post-RoPE (k, v) — exactly what a decode
+    cache stores — for the batched-prefill path."""
+    B, S, _ = x.shape
+    src = x if kv_source is None else kv_source
+    Sk = src.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, heads, head_dim)
+    k = jnp.einsum("bsd,dh->bsh", src, params["wk"]).reshape(B, Sk, kv_heads, head_dim)
+    v = jnp.einsum("bsd,dh->bsh", src, params["wv"]).reshape(B, Sk, kv_heads, head_dim)
+    if causal and kv_source is None:
+        cos_q, sin_q = layers.rope_angles(jnp.arange(S), int(head_dim * rope_fraction) & ~1, rope_theta)
+        q = layers.apply_rope(q, cos_q[None], sin_q[None], rope_fraction)
+        k = layers.apply_rope(k, cos_q[None], sin_q[None], rope_fraction)
+    out = chunked_attention(
+        q, k, v, causal=causal and kv_source is None, window=window, chunk=chunk, rules=rules
+    )
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, heads * head_dim), params["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(
+    params: dict,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    rope_fraction: float = 1.0,
+    window: int = 0,
+):
+    """One-token decode. x: (B, 1, d); cache_k/v: (B, S, KV, hd); pos: () current
+    position. Returns (out (B,1,d), new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    S = cache_k.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, 1, heads, head_dim)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, 1, kv_heads, head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, 1, kv_heads, head_dim)
+    rot = int(head_dim * rope_fraction) & ~1
+    cos, sin = layers.rope_angles(pos[None], rot, rope_theta)
+    q = layers.apply_rope(q, cos[None], sin[None], rope_fraction)
+    k = layers.apply_rope(k, cos[None], sin[None], rope_fraction)
+
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    G = heads // kv_heads
+    qf = (q.astype(jnp.float32) / math.sqrt(head_dim)).reshape(B, kv_heads, G, head_dim)
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, kf)  # (B, KV, G, S)
+    k_pos = jnp.arange(S)
+    valid = k_pos <= pos
+    if isinstance(window, int):
+        if window > 0:
+            valid &= k_pos > pos - window
+    else:
+        valid &= (k_pos > pos - window) | (window <= 0)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, vf).reshape(B, 1, heads * head_dim)
+    out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype), params["wo"])
+    return out, cache_k, cache_v
+
+
+# ------------------------------------------------------------------ MLA
+
+
+def init_mla(
+    key,
+    d: int,
+    heads: int,
+    *,
+    q_lora: int,
+    kv_lora: int,
+    nope: int,
+    rope_d: int,
+    v_dim: int,
+    dtype,
+) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": _dense(ks[0], (d, q_lora), d, dtype),
+        "w_uq": _dense(ks[1], (q_lora, heads * (nope + rope_d)), q_lora, dtype),
+        "w_dkv": _dense(ks[2], (d, kv_lora + rope_d), d, dtype),
+        "w_ukv": _dense(ks[3], (kv_lora, heads * (nope + v_dim)), kv_lora, dtype),
+        "wo": _dense(ks[4], (heads * v_dim, d), heads * v_dim, dtype),
+    }
+
+
+def mla_forward(
+    params: dict,
+    x: jax.Array,
+    *,
+    heads: int,
+    q_lora: int,
+    kv_lora: int,
+    nope: int,
+    rope_d: int,
+    v_dim: int,
+    rope_theta: float,
+    chunk: int = 1024,
+    return_kv: bool = False,
+    rules=None,
+):
+    """Training/prefill MLA: expand the latent to per-head K/V and run flash.
+
+    return_kv=True additionally returns (c_kv, k_rope) — the latent decode cache."""
+    B, S, _ = x.shape
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+    q = jnp.einsum("bsr,rh->bsh", cq, params["w_uq"]).reshape(B, S, heads, nope + rope_d)
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    ckv, k_rope = ckv_full[..., :kv_lora], ckv_full[..., kv_lora:]
+    kv = jnp.einsum("bsr,rh->bsh", ckv, params["w_ukv"]).reshape(B, S, heads, nope + v_dim)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    cos, sin = layers.rope_angles(jnp.arange(S), rope_d, rope_theta)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = layers.apply_rope(q_rope, cos[None], sin[None])
+    k_rope1 = layers.apply_rope(k_rope[:, :, None, :], cos[None], sin[None])  # (B,S,1,rope_d)
+    k_rope = jnp.broadcast_to(k_rope1, (B, S, heads, rope_d))
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    out = chunked_attention(q_full, k_full, v, causal=True, chunk=chunk, rules=rules)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, heads * v_dim), params["wo"])
+    if return_kv:
+        return out, (ckv, k_rope1[:, :, 0, :])
+    return out
+
+
+def mla_decode(
+    params: dict,
+    x: jax.Array,
+    cache_ckv: jax.Array,
+    cache_krope: jax.Array,
+    pos: jax.Array,
+    *,
+    heads: int,
+    kv_lora: int,
+    nope: int,
+    rope_d: int,
+    v_dim: int,
+    rope_theta: float,
+):
+    """Absorbed-matrix MLA decode (the MLA serving trick, TPU-native):
+
+    Cache only the latent (c_kv, k_rope) — (kv_lora + rope_d) per position instead of
+    heads·(nope+v). Scores fold W_ukv into the query:  s = (q_nopeᵀ·W_uk)·c_kv, and the
+    value path stays latent until the final per-head expansion.
+    """
+    B = x.shape[0]
+    S = cache_ckv.shape[1]
+    w_uk = params["w_ukv"].reshape(kv_lora, heads, nope + v_dim)[:, :, :nope]  # (r, H, nope)
+    w_uv = params["w_ukv"].reshape(kv_lora, heads, nope + v_dim)[:, :, nope:]  # (r, H, v)
+
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+    q = jnp.einsum("bsr,rh->bsh", cq, params["w_uq"]).reshape(B, heads, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = layers.rope_angles(pos[None], rope_d, rope_theta)
+    q_rope = layers.apply_rope(q_rope[:, None], cos[None], sin[None])[:, 0]
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])[:, 0]
+    ckv_new, krope_new = ckv_full[..., :kv_lora], ckv_full[..., kv_lora:]
+    krope_new = layers.apply_rope(krope_new[:, None, None, :], cos[None], sin[None])[:, 0, 0]
+
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, ckv_new[:, None].astype(cache_ckv.dtype), (0, pos, 0))
+    cache_krope = jax.lax.dynamic_update_slice(
+        cache_krope, krope_new[:, None].astype(cache_krope.dtype), (0, pos, 0)
+    )
+
+    # absorbed scores: (B, H, r) @ (B, S, r) + rope part
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), cache_ckv.astype(jnp.float32))
+    s += jnp.einsum("bhp,bsp->bhs", q_rope.astype(jnp.float32), cache_krope.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(nope + rope_d)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, cache_ckv.astype(jnp.float32))  # (B, H, r)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat.astype(x.dtype), w_uv).reshape(B, 1, heads * v_dim)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return out, cache_ckv, cache_krope
+
+
+# ------------------------------------------------------------------ cross-attn decode
+
+
+def cross_decode(
+    params: dict,
+    x: jax.Array,
+    xk: jax.Array,
+    xv: jax.Array,
+    *,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+) -> jax.Array:
+    """One-token cross-attention against precomputed encoder K/V (whisper decode).
+
+    x: (B, 1, d); xk/xv: (B, S_enc, KV, hd) — computed once at prefill from the encoder
+    output and carried in the decode cache (they never change during decoding).
+    No positional rotation (enc-dec cross attention), no mask (every frame is visible).
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, heads, head_dim)
+    G = heads // kv_heads
+    qf = (q.astype(jnp.float32) / math.sqrt(head_dim)).reshape(B, kv_heads, G, head_dim)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, xk.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, xv.astype(jnp.float32))
+    out = out.reshape(B, 1, heads * head_dim).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"])

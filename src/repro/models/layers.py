@@ -1,0 +1,123 @@
+"""Shared neural-net layers: norms, rotary embeddings, FFNs, embeddings.
+
+Everything is functional: ``init_*`` builds a param dict, the apply functions are pure.
+Parameters are plain nested dicts of jnp arrays so that checkpointing, sharding rules
+and lax.scan stacking stay trivial.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------------ rotary
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding. positions: (...,) int; dim must be even.
+    Returns (cos, sin) of shape positions.shape + (dim//2,)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, fraction: float = 1.0) -> jax.Array:
+    """Rotate the first ``fraction`` of the head dim of x: (..., S, H, hd).
+
+    cos/sin: (..., S, rot/2) broadcast over heads. ChatGLM-style 2d rope is
+    fraction=0.5 (second half of the head dim passes through unrotated).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    xr = x_rot.reshape(*x_rot.shape[:-1], rot // 2, 2)
+    x1, x2 = xr[..., 0], xr[..., 1]
+    c = cos[..., None, : rot // 2]
+    s = sin[..., None, : rot // 2]
+    # rotate in f32 (cos/sin precision), return in the activation dtype
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([y, x_pass], axis=-1) if rot < hd else y
+
+
+# ------------------------------------------------------------------ FFN (SwiGLU)
+
+
+def init_swiglu(key: jax.Array, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d, f), d, dtype),
+        "w_up": _dense_init(k2, (d, f), d, dtype),
+        "w_down": _dense_init(k3, (f, d), f, dtype),
+    }
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ------------------------------------------------------------------ embeddings
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def init_unembed(key: jax.Array, d: int, vocab: int, dtype) -> dict:
+    return {"w": _dense_init(key, (d, vocab), d, dtype)}
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x, params["w"])
+
+
+# ------------------------------------------------------------------ losses
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean next-token CE. logits: (..., V) any dtype; computed in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,904 @@
+"""Model assembly: every assigned architecture as one functional decoder stack.
+
+One parameter layout, one forward, one decode — family differences (dense / MoE / SSM /
+hybrid / enc-dec / VLM) are dispatch points inside the per-layer body. Layers are
+*stacked* (every leaf gets a leading L axis, built with ``jax.vmap`` over per-layer
+keys) and iterated with ``lax.scan`` so the HLO size is independent of depth — at
+62-layer / 64-layer configs an unrolled stack would take minutes to compile and blow
+the dry-run memory.
+
+Positional note (documented hardware adaptation): whisper's learned absolute positions
+and conv frontend are replaced by the precomputed-frame stub + RoPE on the decoder;
+this keeps one rotary implementation across all ten archs.
+
+Remat: each scan step is wrapped in ``jax.checkpoint`` (policy selectable) so training
+activations are O(L · remat-residuals) instead of O(L · full-layer-intermediates).
+The LM head loss is *chunked over the sequence* — logits at (B, S, 262k-vocab) never
+materialize; each chunk's logits are recomputed in the backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import attention, layers, moe as moe_lib, ssm as ssm_lib
+
+PyTree = Any
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    """Execution knobs, orthogonal to the architecture config.
+
+    The *exec* plan controls real peak memory (chunk sizes bound flash/CE/SSM tiles,
+    rolled scans reuse buffers). The *analysis* plan (``analysis_plan``) unrolls every
+    loop and widens chunks to one trip so XLA's HLO cost analysis — which counts a
+    ``while`` body exactly once — sees the true FLOP/byte/collective totals; analysis
+    lowerings are never executed, so their absurd intermediate sizes don't matter.
+    """
+
+    attn_chunk: int = 1024      # flash key-chunk
+    loss_chunk: int = 512       # CE vocab-matmul sequence chunk
+    ssm_chunk: int = 128        # mamba associative-scan chunk
+    remat: str = "full"         # none | full | dots
+    unroll: Any = 1             # lax.scan unroll for the layer stack
+
+
+def analysis_plan(seq_len: int, *, remat: str = "full") -> ExecPlan:
+    big = max(seq_len, 1)
+    return ExecPlan(attn_chunk=big, loss_chunk=big, ssm_chunk=big, remat=remat, unroll=True)
+
+
+# ===================================================================== layer windows
+
+
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer attention window (int32, 0 = global/full) — the gemma3 5:1 pattern,
+    mixtral's uniform SWA, or all-zeros for full attention."""
+    if cfg.attn_kind == "local_global" and cfg.local_global_ratio > 0:
+        period = cfg.local_global_ratio + 1
+        idx = jnp.arange(cfg.num_layers)
+        return jnp.where(idx % period < cfg.local_global_ratio, cfg.window, 0).astype(jnp.int32)
+    if cfg.attn_kind == "swa" and cfg.window > 0:
+        return jnp.full((cfg.num_layers,), cfg.window, jnp.int32)
+    return jnp.zeros((cfg.num_layers,), jnp.int32)
+
+
+def cache_lengths(cfg: ArchConfig, seq_len: int) -> jnp.ndarray:
+    """Per-layer KV cache length: SWA layers keep a rolling ``window`` buffer."""
+    w = layer_windows(cfg)
+    return jnp.where(w > 0, jnp.minimum(w, seq_len), seq_len)
+
+
+# ===================================================================== init
+
+
+def _init_attn(key, cfg: ArchConfig, dtype) -> dict:
+    if cfg.mla:
+        return attention.init_mla(
+            key,
+            cfg.d_model,
+            cfg.num_heads,
+            q_lora=cfg.q_lora_rank,
+            kv_lora=cfg.kv_lora_rank,
+            nope=cfg.qk_nope_dim,
+            rope_d=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim,
+            dtype=dtype,
+        )
+    return attention.init_gqa(
+        key, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+    )
+
+
+def _init_layer(key, cfg: ArchConfig, dtype) -> dict:
+    """One decoder layer's params; vmapped over L keys to build the stacked tree."""
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": layers.init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.family == "ssm":
+        p["mamba"] = ssm_lib.init_mamba(
+            ks[0],
+            cfg.d_model,
+            d_inner=cfg.d_inner,
+            state=cfg.ssm_state,
+            d_conv=cfg.d_conv,
+            dt_rank=cfg.resolved_dt_rank,
+            dtype=dtype,
+        )
+        return p
+    p["attn"] = _init_attn(ks[0], cfg, dtype)
+    if cfg.hybrid:
+        p["mamba"] = ssm_lib.init_mamba(
+            ks[1],
+            cfg.d_model,
+            d_inner=cfg.d_inner,
+            state=cfg.ssm_state,
+            d_conv=cfg.d_conv,
+            dt_rank=cfg.resolved_dt_rank,
+            dtype=dtype,
+        )
+        p["fuse"] = {
+            "norm_a": layers.init_rmsnorm(cfg.d_model, dtype),
+            "norm_s": layers.init_rmsnorm(cfg.d_model, dtype),
+            "beta_a": jnp.full((cfg.d_model,), 0.5, dtype),
+            "beta_s": jnp.full((cfg.d_model,), 0.5, dtype),
+        }
+    if cfg.encdec:
+        p["norm_x"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["xattn"] = attention.init_gqa(
+            ks[2], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        )
+    p["norm2"] = layers.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.moe:
+        p["moe"] = moe_lib.init_moe(ks[3], cfg.d_model, cfg.d_ff, cfg.num_experts, dtype)
+    else:
+        p["ffn"] = layers.init_swiglu(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": layers.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attention.init_gqa(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        ),
+        "norm2": layers.init_rmsnorm(cfg.d_model, dtype),
+        "ffn": layers.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    """Full parameter tree. Layer leaves are stacked with a leading L axis."""
+    dtype = _dtype(cfg)
+    k_emb, k_layers, k_norm, k_un, k_enc, k_vit = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg, dtype))(
+            jax.random.split(k_layers, cfg.num_layers)
+        ),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.tie_embeddings:
+        pass  # unembed reuses embed.table
+    else:
+        params["unembed"] = layers.init_unembed(k_un, cfg.d_model, cfg.padded_vocab, dtype)
+    if cfg.encdec:
+        params["enc_layers"] = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(k_enc, cfg.enc_layers)
+        )
+        params["enc_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.vlm:
+        params["vit_proj"] = {
+            "w": (jax.random.normal(k_vit, (cfg.vit_dim, cfg.d_model)) / math.sqrt(cfg.vit_dim)).astype(dtype)
+        }
+    return params
+
+
+def param_shapes(cfg: ArchConfig) -> PyTree:
+    """ShapeDtypeStruct tree without allocating — used by the dry-run / checkpoints."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ===================================================================== forward (train/prefill)
+
+
+def _attn_block(lp, x, cfg: ArchConfig, window, *, plan: ExecPlan, rules=None):
+    if cfg.mla:
+        return attention.mla_forward(
+            lp["attn"],
+            x,
+            heads=cfg.num_heads,
+            q_lora=cfg.q_lora_rank,
+            kv_lora=cfg.kv_lora_rank,
+            nope=cfg.qk_nope_dim,
+            rope_d=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim,
+            rope_theta=cfg.rope_theta,
+            chunk=plan.attn_chunk,
+            rules=rules,
+        )
+    return attention.gqa_forward(
+        lp["attn"],
+        x,
+        heads=cfg.num_heads,
+        kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        rope_fraction=cfg.rope_fraction,
+        window=window,
+        chunk=plan.attn_chunk,
+        rules=rules,
+    )
+
+
+def _layer_fwd(lp, x, cfg: ArchConfig, window, *, rules, plan: ExecPlan, enc_out=None):
+    """One decoder layer (training/prefill). Returns (x, aux_loss).
+
+    Layer-boundary activations are *sequence-parallel*: (B, S, d) is sharded
+    (dp, tensor, –) so the per-layer remat residual divides by the tensor width.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    x = constrain(x, rules, "dp", "sp", None)
+    if cfg.family == "ssm":
+        h = layers.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        x = x + ssm_lib.mamba_forward(
+            lp["mamba"], h, state=cfg.ssm_state, dt_rank=cfg.resolved_dt_rank, chunk=plan.ssm_chunk
+        )
+        return x, aux
+    h = layers.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    a = _attn_block(lp, h, cfg, window, plan=plan, rules=rules)
+    if cfg.hybrid:
+        s = ssm_lib.mamba_forward(
+            lp["mamba"], h, state=cfg.ssm_state, dt_rank=cfg.resolved_dt_rank, chunk=plan.ssm_chunk
+        )
+        a = layers.rmsnorm(lp["fuse"]["norm_a"], a, cfg.norm_eps) * lp["fuse"]["beta_a"]
+        a = a + layers.rmsnorm(lp["fuse"]["norm_s"], s, cfg.norm_eps) * lp["fuse"]["beta_s"]
+    x = x + a
+    if cfg.encdec:
+        hx = layers.rmsnorm(lp["norm_x"], x, cfg.norm_eps)
+        x = x + attention.gqa_forward(
+            lp["xattn"],
+            hx,
+            heads=cfg.num_heads,
+            kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta,
+            causal=False,
+            kv_source=enc_out,
+            chunk=plan.attn_chunk,
+            rules=rules,
+        )
+    h2 = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if cfg.moe:
+        # MoE dispatch sorts along the sequence axis — keep that axis LOCAL (un-SP
+        # the block) or every argsort/gather crosses the model axis. One all-gather
+        # in, one reduce back out beats per-expert collective thrash (§Perf iter on
+        # grok-1: the baseline compiled to 2.6k all-to-alls per step).
+        h2 = constrain(h2, rules, "dp", None, None)
+        f, aux = moe_lib.moe_forward(
+            lp["moe"],
+            h2,
+            num_experts=cfg.num_experts,
+            top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+            rules=rules,
+        )
+        f = constrain(f, rules, "dp", "sp", None)
+    else:
+        f = layers.swiglu(lp["ffn"], h2)
+    return x + f, aux
+
+
+def encoder_forward(
+    params, cfg: ArchConfig, frames: jax.Array, *, rules=None, plan: ExecPlan = ExecPlan()
+):
+    """Bidirectional encoder over precomputed frame embeddings (whisper stub)."""
+
+    def body(x, lp):
+        x = constrain(x, rules, "dp", None, None)
+        h = layers.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        x = x + attention.gqa_forward(
+            lp["attn"],
+            h,
+            heads=cfg.num_heads,
+            kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta,
+            causal=False,
+            chunk=plan.attn_chunk,
+            rules=rules,
+        )
+        h2 = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        return x + layers.swiglu(lp["ffn"], h2), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), frames, params["enc_layers"], unroll=plan.unroll)
+    return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def trunk(
+    params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    rules: Optional[ShardingRules] = None,
+    enc_out: Optional[jax.Array] = None,
+    plan: ExecPlan = ExecPlan(),
+) -> Tuple[jax.Array, jax.Array]:
+    """Scan the stacked layers over x: (B, S, d). Returns (hidden, moe_aux_sum)."""
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        lp, window = xs
+        x, aux = _layer_fwd(lp, x, cfg, window, rules=rules, plan=plan, enc_out=enc_out)
+        return (x, aux_acc + aux), None
+
+    if plan.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif plan.remat == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], windows), unroll=plan.unroll
+    )
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def embed_inputs(
+    params, cfg: ArchConfig, batch: Dict[str, jax.Array], *, rules=None, plan: ExecPlan = ExecPlan()
+):
+    """Token (+frontend-stub) embedding. Returns (x, loss_mask, enc_out)."""
+    x = layers.embed(params["embed"], batch["tokens"])
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(batch["tokens"].shape, jnp.float32)
+    enc_out = None
+    if cfg.vlm and "patches" in batch:
+        proj = jnp.einsum("bpv,vd->bpd", batch["patches"].astype(x.dtype), params["vit_proj"]["w"])
+        P_img = proj.shape[1]
+        x = jnp.concatenate([proj, x[:, P_img:]], axis=1)
+        mask = jnp.concatenate([jnp.zeros((x.shape[0], P_img), jnp.float32), mask[:, P_img:]], axis=1)
+    if cfg.encdec and "frames" in batch:
+        enc_out = encoder_forward(params, cfg, batch["frames"].astype(x.dtype), rules=rules, plan=plan)
+    return x, mask, enc_out
+
+
+def _unembed_w(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["unembed"]["w"]
+
+
+def chunked_ce_loss(
+    h: jax.Array,
+    w: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    *,
+    chunk: int = 512,
+    rules: Optional[ShardingRules] = None,
+) -> jax.Array:
+    """Next-token CE without materializing (B, S, V) logits.
+
+    Scans the sequence in chunks; each chunk's logits are produced, reduced to a
+    scalar, and discarded (jax.checkpoint → recomputed in backward). The vocab axis
+    of the matmul is tensor-sharded; the logsumexp reduces across it (one psum per
+    chunk, inserted by GSPMD).
+    """
+    B, S, d = h.shape
+    n_chunks = -(-S // chunk)
+    S_pad = n_chunks * chunk
+    if S_pad != S:
+        h = jnp.pad(h, ((0, 0), (0, S_pad - S), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, S_pad - S)))
+        mask = jnp.pad(mask, ((0, 0), (0, S_pad - S)))
+    hc = h.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hj, lj, mj = xs
+        logits = jnp.einsum("bsd,dv->bsv", hj, w).astype(jnp.float32)
+        logits = constrain(logits, rules, "dp", None, "tensor")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lj[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mj
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mj)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(
+    params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    rules: Optional[ShardingRules] = None,
+    plan: ExecPlan = ExecPlan(),
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token CE (+ MoE aux). The single entry point for training."""
+    x, mask, enc_out = embed_inputs(params, cfg, batch, rules=rules, plan=plan)
+    h, aux = trunk(params, cfg, x, rules=rules, enc_out=enc_out, plan=plan)
+    # shift: predict token t+1 from position t
+    labels = batch["labels"]
+    ce = chunked_ce_loss(
+        h[:, :-1], _unembed_w(params, cfg), labels[:, 1:], mask[:, 1:], chunk=plan.loss_chunk, rules=rules
+    )
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def forward_logits(
+    params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    rules=None,
+    plan: ExecPlan = ExecPlan(remat="none"),
+) -> jax.Array:
+    """Full (B, S, V_pad) logits — small models / tests only (no chunking)."""
+    x, _, enc_out = embed_inputs(params, cfg, batch, rules=rules, plan=plan)
+    h, _ = trunk(params, cfg, x, rules=rules, enc_out=enc_out, plan=plan)
+    return jnp.einsum("bsd,dv->bsv", h, _unembed_w(params, cfg)).astype(jnp.float32)
+
+
+# ===================================================================== KV cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, *, dtype=None) -> PyTree:
+    """Decode cache for ``seq_len`` context. Stacked (L, ...) leaves.
+
+    SWA layers keep a rolling window buffer; for local_global (gemma3) the cache is
+    split into a 'local' stack (ring of ``window``) and a 'global' stack (full
+    ``seq_len``) so the 5:1 pattern doesn't pay full-context memory on local layers.
+    """
+    dtype = dtype or _dtype(cfg)
+    L, hd, KV = cfg.num_layers, cfg.resolved_head_dim, cfg.num_kv_heads
+    cache: Dict[str, Any] = {}
+
+    def kv(nl, s):
+        return {
+            "k": jnp.zeros((nl, batch, s, KV, hd), dtype),
+            "v": jnp.zeros((nl, batch, s, KV, hd), dtype),
+        }
+
+    if cfg.family == "ssm":
+        cache["conv"] = jnp.zeros((L, batch, cfg.d_conv - 1, cfg.d_inner), dtype)
+        cache["ssm"] = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        return cache
+    if cfg.mla:
+        cache["ckv"] = jnp.zeros((L, batch, seq_len, cfg.kv_lora_rank), dtype)
+        cache["krope"] = jnp.zeros((L, batch, seq_len, cfg.qk_rope_dim), dtype)
+        return cache
+    if cfg.attn_kind == "local_global" and cfg.local_global_ratio > 0:
+        period = cfg.local_global_ratio + 1
+        n_groups = L // period
+        cache["local"] = kv(n_groups * cfg.local_global_ratio, min(cfg.window, seq_len))
+        cache["global"] = kv(n_groups, seq_len)
+    else:
+        s = min(cfg.window, seq_len) if (cfg.attn_kind == "swa" and cfg.window > 0) else seq_len
+        cache.update(kv(L, s))
+    if cfg.hybrid:
+        cache["conv"] = jnp.zeros((L, batch, cfg.d_conv - 1, cfg.d_inner), dtype)
+        cache["ssm"] = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    if cfg.encdec:
+        cache["xk"] = jnp.zeros((L, batch, cfg.enc_seq, KV, hd), dtype)
+        cache["xv"] = jnp.zeros((L, batch, cfg.enc_seq, KV, hd), dtype)
+    return cache
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq_len: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+
+
+# ===================================================================== decode
+
+
+def _ring_update_and_scores_mask(pos: jax.Array, s_cache: int):
+    """Slot + absolute positions for a ring buffer of size s_cache at step pos."""
+    slot = jnp.mod(pos, s_cache)
+    idx = jnp.arange(s_cache)
+    ages = jnp.mod(pos - idx, s_cache)
+    k_pos = pos - ages
+    valid = k_pos >= 0
+    return slot, valid
+
+
+def _gqa_ring_decode(lp, x, ck, cv, pos, cfg: ArchConfig):
+    """GQA decode against a (possibly rolling) cache. ck/cv: (B, Sc, KV, hd)."""
+    B = x.shape[0]
+    Sc = ck.shape[1]
+    hd, H, KV = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, lp["wq"]).reshape(B, 1, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, lp["wk"]).reshape(B, 1, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, lp["wv"]).reshape(B, 1, KV, hd)
+    rot = int(hd * cfg.rope_fraction) & ~1
+    cos, sin = layers.rope_angles(pos[None], rot, cfg.rope_theta)
+    q = layers.apply_rope(q, cos[None], sin[None], cfg.rope_fraction)
+    k = layers.apply_rope(k, cos[None], sin[None], cfg.rope_fraction)
+
+    slot, valid = _ring_update_and_scores_mask(pos, Sc)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+
+    G = H // KV
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, ck.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, attention.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, cv.astype(jnp.float32)).reshape(B, 1, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype), lp["wo"])
+    return out, ck, cv
+
+
+def _decode_layer(lp, x, lc, pos, cfg: ArchConfig, *, enc_cached=False):
+    """One layer's decode. lc = this layer's cache slice dict. Returns (x, lc)."""
+    h = layers.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    if cfg.family == "ssm":
+        out, conv, ssm_state = ssm_lib.mamba_decode(
+            lp["mamba"], h, lc["conv"], lc["ssm"], state=cfg.ssm_state, dt_rank=cfg.resolved_dt_rank
+        )
+        return x + out, {"conv": conv, "ssm": ssm_state}
+    if cfg.mla:
+        out, ckv, krope = attention.mla_decode(
+            lp["attn"],
+            h,
+            lc["ckv"],
+            lc["krope"],
+            pos,
+            heads=cfg.num_heads,
+            kv_lora=cfg.kv_lora_rank,
+            nope=cfg.qk_nope_dim,
+            rope_d=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+        x = x + out
+        lc = {"ckv": ckv, "krope": krope}
+    else:
+        a, ck, cv = _gqa_ring_decode(lp["attn"], h, lc["k"], lc["v"], pos, cfg)
+        new_lc = {"k": ck, "v": cv}
+        if cfg.hybrid:
+            s_out, conv, ssm_state = ssm_lib.mamba_decode(
+                lp["mamba"], h, lc["conv"], lc["ssm"], state=cfg.ssm_state, dt_rank=cfg.resolved_dt_rank
+            )
+            a = layers.rmsnorm(lp["fuse"]["norm_a"], a, cfg.norm_eps) * lp["fuse"]["beta_a"]
+            a = a + layers.rmsnorm(lp["fuse"]["norm_s"], s_out, cfg.norm_eps) * lp["fuse"]["beta_s"]
+            new_lc.update({"conv": conv, "ssm": ssm_state})
+        x = x + a
+        if cfg.encdec:
+            hx = layers.rmsnorm(lp["norm_x"], x, cfg.norm_eps)
+            x = x + attention.cross_decode(
+                lp["xattn"],
+                hx,
+                lc["xk"],
+                lc["xv"],
+                heads=cfg.num_heads,
+                kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim,
+            )
+            new_lc.update({"xk": lc["xk"], "xv": lc["xv"]})
+        lc = new_lc
+    h2 = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if cfg.moe:
+        B = x.shape[0]
+        f, _ = moe_lib.moe_forward(
+            lp["moe"],
+            h2.reshape(1, B, cfg.d_model),
+            num_experts=cfg.num_experts,
+            top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+        f = f.reshape(B, 1, cfg.d_model)
+    else:
+        f = layers.swiglu(lp["ffn"], h2)
+    return x + f, lc
+
+
+def decode_step(
+    params,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    cache: PyTree,
+    pos: jax.Array,
+    *,
+    rules: Optional[ShardingRules] = None,
+    x_embed: Optional[jax.Array] = None,
+    plan: ExecPlan = ExecPlan(),
+) -> Tuple[jax.Array, PyTree]:
+    """One-token decode. tokens: (B,) int32; pos: () int32 (current position).
+
+    ``x_embed`` (B, d): pre-embedded input overriding the token lookup — used by the
+    token-by-token prefill of multimodal prompts (patch embeddings at image slots).
+    Returns (logits (B, V_pad), new cache).
+    """
+    x = layers.embed(params["embed"], tokens[:, None]) if x_embed is None else x_embed[:, None, :]
+    x = constrain(x, rules, "dp", None, None)
+
+    if cfg.attn_kind == "local_global" and cfg.local_global_ratio > 0:
+        x, cache = _decode_local_global(params, cfg, x, cache, pos, unroll=plan.unroll)
+    else:
+        keys = [k for k in ("k", "v", "ckv", "krope", "conv", "ssm", "xk", "xv") if k in cache]
+
+        def body(x, xs):
+            lp, lc = xs
+            x, lc = _decode_layer(lp, x, lc, pos, cfg)
+            return x, lc
+
+        x, new_stacked = jax.lax.scan(
+            body, x, (params["layers"], {k: cache[k] for k in keys}), unroll=plan.unroll
+        )
+        cache = dict(cache, **new_stacked)
+
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, _unembed_w(params, cfg))[:, 0].astype(jnp.float32)
+    logits = constrain(logits, rules, "dp", "tensor")
+    return logits, cache
+
+
+def _decode_local_global(params, cfg: ArchConfig, x, cache, pos, *, unroll=1):
+    """gemma3 5:1 decode: scan over groups; each group = R local layers + 1 global.
+
+    The local stack's ring caches and the global stack's full caches have different
+    sequence lengths, so they live in separate stacked pytrees.
+    """
+    R = cfg.local_global_ratio
+    period = R + 1
+    G = cfg.num_layers // period
+
+    def regroup(leaf):  # (L, ...) -> (G, period, ...)
+        return leaf.reshape((G, period) + leaf.shape[1:])
+
+    gp = jax.tree_util.tree_map(regroup, params["layers"])
+    lp_local = jax.tree_util.tree_map(lambda l: l[:, :R], gp)
+    lp_global = jax.tree_util.tree_map(lambda l: l[:, R], gp)
+
+    def lc_regroup(leaf):  # (G*R, ...) -> (G, R, ...)
+        return leaf.reshape((G, R) + leaf.shape[1:])
+
+    local_c = jax.tree_util.tree_map(lc_regroup, cache["local"])
+
+    def body(x, xs):
+        lpl, lpg, lcl, lcg = xs
+        new_lcl = []
+        for r in range(R):  # static unroll: R = 5
+            lp_r = jax.tree_util.tree_map(lambda l: l[r], lpl)
+            lc_r = jax.tree_util.tree_map(lambda l: l[r], lcl)
+            x_new, lc_r = _decode_layer(lp_r, x, lc_r, pos, cfg)
+            x = x_new
+            new_lcl.append(lc_r)
+        lcl = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *new_lcl)
+        x, lcg = _decode_layer(lpg, x, lcg, pos, cfg)
+        return x, (lcl, lcg)
+
+    x, (new_local, new_global) = jax.lax.scan(
+        body, x, (lp_local, lp_global, local_c, cache["global"]), unroll=unroll
+    )
+    new_local = jax.tree_util.tree_map(lambda l: l.reshape((G * R,) + l.shape[2:]), new_local)
+    return x, dict(cache, local=new_local, **{"global": new_global})
+
+
+# ===================================================================== prefill
+
+
+def _layer_prefill(lp, x, cfg: ArchConfig, window, *, rules, plan: ExecPlan, enc_out=None):
+    """_layer_fwd twin that also returns this layer's decode-cache piece."""
+    piece: Dict[str, jax.Array] = {}
+    x = constrain(x, rules, "dp", "sp", None)
+    if cfg.family == "ssm":
+        h = layers.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        out, (tail, hT) = ssm_lib.mamba_forward(
+            lp["mamba"], h, state=cfg.ssm_state, dt_rank=cfg.resolved_dt_rank,
+            chunk=plan.ssm_chunk, return_state=True
+        )
+        return x + out, {"conv": tail, "ssm": hT}
+    h = layers.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a, (ckv, krope) = attention.mla_forward(
+            lp["attn"],
+            h,
+            heads=cfg.num_heads,
+            q_lora=cfg.q_lora_rank,
+            kv_lora=cfg.kv_lora_rank,
+            nope=cfg.qk_nope_dim,
+            rope_d=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim,
+            rope_theta=cfg.rope_theta,
+            chunk=plan.attn_chunk,
+            rules=rules,
+            return_kv=True,
+        )
+        piece.update({"ckv": ckv, "krope": krope})
+    else:
+        a, (k, v) = attention.gqa_forward(
+            lp["attn"],
+            h,
+            heads=cfg.num_heads,
+            kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta,
+            rope_fraction=cfg.rope_fraction,
+            window=window,
+            chunk=plan.attn_chunk,
+            rules=rules,
+            return_kv=True,
+        )
+        piece.update({"k": k, "v": v})
+    if cfg.hybrid:
+        s, (tail, hT) = ssm_lib.mamba_forward(
+            lp["mamba"], h, state=cfg.ssm_state, dt_rank=cfg.resolved_dt_rank,
+            chunk=plan.ssm_chunk, return_state=True
+        )
+        a = layers.rmsnorm(lp["fuse"]["norm_a"], a, cfg.norm_eps) * lp["fuse"]["beta_a"]
+        a = a + layers.rmsnorm(lp["fuse"]["norm_s"], s, cfg.norm_eps) * lp["fuse"]["beta_s"]
+        piece.update({"conv": tail, "ssm": hT})
+    x = x + a
+    if cfg.encdec:
+        hx = layers.rmsnorm(lp["norm_x"], x, cfg.norm_eps)
+        xa, (xk, xv) = attention.gqa_forward(
+            lp["xattn"],
+            hx,
+            heads=cfg.num_heads,
+            kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta,
+            causal=False,
+            kv_source=enc_out,
+            chunk=plan.attn_chunk,
+            rules=rules,
+            return_kv=True,
+        )
+        x = x + xa
+        piece.update({"xk": xk, "xv": xv})
+    h2 = layers.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if cfg.moe:
+        h2 = constrain(h2, rules, "dp", None, None)  # see _layer_fwd: SP-local MoE
+        f, _ = moe_lib.moe_forward(
+            lp["moe"], h2, num_experts=cfg.num_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, rules=rules,
+        )
+        f = constrain(f, rules, "dp", "sp", None)
+    else:
+        f = layers.swiglu(lp["ffn"], h2)
+    return x + f, piece
+
+
+def _ring_place(k_all: jax.Array, s_cache: int) -> jax.Array:
+    """Scatter the last min(s_cache, S) positions of (L, B, S, ...) into a ring of
+    ``s_cache`` slots at indices p % s_cache (static — S and s_cache are concrete)."""
+    import numpy as np
+
+    L, B, S = k_all.shape[:3]
+    out = jnp.zeros(k_all.shape[:2] + (s_cache,) + k_all.shape[3:], k_all.dtype)
+    take = min(s_cache, S)
+    positions = np.arange(S - take, S)
+    slots = positions % s_cache
+    return out.at[:, :, slots].set(k_all[:, :, S - take:])
+
+
+def batched_prefill(
+    params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    cache_len: Optional[int] = None,
+    rules: Optional[ShardingRules] = None,
+    plan: ExecPlan = ExecPlan(),
+) -> Tuple[jax.Array, PyTree]:
+    """Flash prefill: one batched pass over the prompt.
+
+    Returns (last-token logits (B, V_pad), a decode cache positioned at pos = S).
+    This is what the ``prefill_32k`` dry-run cells lower — the production
+    prompt-processing step, O(S·window) attention for SWA layers, O(S²/2) global.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x, _, enc_out = embed_inputs(params, cfg, batch, rules=rules, plan=plan)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        lp, window = xs
+        x, piece = _layer_prefill(lp, x, cfg, window, rules=rules, plan=plan, enc_out=enc_out)
+        return x, piece
+
+    x, pieces = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), x, (params["layers"], windows), unroll=plan.unroll
+    )
+    h = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, _unembed_w(params, cfg))[:, 0].astype(jnp.float32)
+    logits = constrain(logits, rules, "dp", "tensor")
+
+    cache: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        return logits, {"conv": pieces["conv"], "ssm": pieces["ssm"]}
+    if cfg.mla:
+        for name in ("ckv", "krope"):
+            full = jnp.zeros(
+                pieces[name].shape[:2] + (cache_len,) + pieces[name].shape[3:], pieces[name].dtype
+            )
+            cache[name] = jax.lax.dynamic_update_slice(
+                full, pieces[name], (0, 0, 0) + (0,) * (full.ndim - 3)
+            )
+        return logits, cache
+    if cfg.attn_kind == "local_global" and cfg.local_global_ratio > 0:
+        import numpy as np
+
+        R, period = cfg.local_global_ratio, cfg.local_global_ratio + 1
+        is_local = np.arange(cfg.num_layers) % period < R
+        local_idx = np.arange(cfg.num_layers)[is_local]
+        global_idx = np.arange(cfg.num_layers)[~is_local]
+        cache["local"] = {
+            n: _ring_place(pieces[n][local_idx], min(cfg.window, cache_len)) for n in ("k", "v")
+        }
+        cache["global"] = {
+            n: _pad_seq(pieces[n][global_idx], cache_len) for n in ("k", "v")
+        }
+    else:
+        if cfg.attn_kind == "swa" and cfg.window > 0:
+            sc = min(cfg.window, cache_len)
+            cache["k"] = _ring_place(pieces["k"], sc)
+            cache["v"] = _ring_place(pieces["v"], sc)
+        else:
+            cache["k"] = _pad_seq(pieces["k"], cache_len)
+            cache["v"] = _pad_seq(pieces["v"], cache_len)
+    if cfg.hybrid:
+        cache["conv"] = pieces["conv"]
+        cache["ssm"] = pieces["ssm"]
+    if cfg.encdec:
+        cache["xk"] = pieces["xk"]
+        cache["xv"] = pieces["xv"]
+    return logits, cache
+
+
+def _pad_seq(k_all: jax.Array, cache_len: int) -> jax.Array:
+    """(L, B, S, ...) -> (L, B, cache_len, ...) zero-extended on the sequence axis."""
+    L, B, S = k_all.shape[:3]
+    if S == cache_len:
+        return k_all
+    if S > cache_len:
+        return k_all[:, :, S - cache_len:]
+    pad = [(0, 0), (0, 0), (0, cache_len - S)] + [(0, 0)] * (k_all.ndim - 3)
+    return jnp.pad(k_all, pad)
+
+
+def prefill(
+    params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    cache: PyTree,
+    *,
+    rules: Optional[ShardingRules] = None,
+    chunk: int = 1024,
+) -> Tuple[jax.Array, PyTree]:
+    """Fill the cache from a prompt by stepping decode over positions.
+
+    Token-by-token prefill (a lax.fori_loop over decode_step) — O(S) steps but exactly
+    one code path for cache semantics (ring buffers, SSM states, MLA latents). The
+    batched flash prefill is used for logits-only paths; serving throughput on TPU
+    would fuse the two (chunked prefill), which we leave as the documented fast path
+    for the prefill_32k dry-run cell (it lowers ``lm_loss``-style trunk instead).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if cfg.encdec and "frames" in batch:
+        enc_out = encoder_forward(params, cfg, batch["frames"].astype(_dtype(cfg)), rules=rules)
+        xk = jnp.einsum(
+            "bsd,ldh->lbsh", enc_out, params["layers"]["xattn"]["wk"]
+        ).reshape(cfg.num_layers, B, cfg.enc_seq, cfg.num_kv_heads, cfg.resolved_head_dim)
+        xv = jnp.einsum(
+            "bsd,ldh->lbsh", enc_out, params["layers"]["xattn"]["wv"]
+        ).reshape(cfg.num_layers, B, cfg.enc_seq, cfg.num_kv_heads, cfg.resolved_head_dim)
+        cache = dict(cache, xk=xk.astype(cache["xk"].dtype), xv=xv.astype(cache["xv"].dtype))
+
+    # Pre-merge frontend-stub embeddings (VLM patches) so position i's input is
+    # identical to the batched path's.
+    x_all, _, _ = embed_inputs(params, cfg, {k: v for k, v in batch.items() if k != "frames"}, rules=rules)
+
+    def step(i, carry):
+        logits, cache = carry
+        tok = jax.lax.dynamic_slice(tokens, (0, i), (B, 1))[:, 0]
+        xe = jax.lax.dynamic_slice(x_all, (0, i, 0), (B, 1, x_all.shape[-1]))[:, 0]
+        logits, cache = decode_step(params, cfg, tok, cache, i, rules=rules, x_embed=xe)
+        return logits, cache
+
+    logits0 = jnp.zeros((B, cfg.padded_vocab), jnp.float32)
+    logits, cache = jax.lax.fori_loop(0, S, step, (logits0, cache))
+    return logits, cache

@@ -1,0 +1,7 @@
+"""Optimizer substrate (from scratch — no optax in the container)."""
+from repro.optim.adamw import AdamWConfig, init_opt_state, adamw_update, global_norm_clip
+from repro.optim.schedules import (
+    constant_schedule,
+    linear_warmup_cosine,
+    linear_schedule,
+)

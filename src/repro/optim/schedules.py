@@ -1,0 +1,29 @@
+"""Learning-rate schedules as pure step -> scale functions (multiply the peak lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def linear_schedule(total_steps: int, end_frac: float = 0.0):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32) / max(total_steps, 1), 1.0)
+        return 1.0 + (end_frac - 1.0) * t
+
+    return f
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int, min_frac: float = 0.1):
+    """Linear 0→1 over warmup, cosine 1→min_frac over the rest."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        t = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return f

@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled (dry-run) artifacts — no hardware required."""
+from repro.roofline.hw import V5E
+from repro.roofline.collectives import parse_collectives, collective_seconds
+from repro.roofline.model import roofline_terms, RooflineResult

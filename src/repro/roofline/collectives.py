@@ -1,0 +1,138 @@
+"""Parse collective ops out of post-SPMD HLO text and cost them.
+
+``compiled.as_text()`` is the per-device module: shapes are per-participant. For each
+collective instruction we record (kind, result bytes, group size) and convert to a
+wire-time estimate with the standard ring-algorithm factors:
+
+    all-gather        (P-1)/P · out_bytes          per device
+    reduce-scatter    (P-1)/P · in_bytes           per device
+    all-reduce        2·(P-1)/P · bytes            (RS + AG)
+    all-to-all        (P-1)/P · bytes
+    collective-permute  bytes                      (one hop)
+
+Cross-pod groups (any group spanning a pod boundary) are costed at DCN bandwidth
+instead of ICI — detected from the device ids in the replica group when the caller
+passes ``pod_size``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# e.g.  %all-gather.7 = f32[4096,512]{1,0} all-gather(%x), channel_id=1, replica_groups=...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{\{(\d+),(\d+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int            # per-device result/operand bytes
+    group_size: int
+    crosses_pod: bool
+    line: str
+
+
+def parse_collectives(hlo_text: str, *, pod_size: Optional[int] = None) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m is None:
+            continue
+        tuple_body, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        if tuple_body is not None:
+            nbytes = sum(_shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(tuple_body))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        group: List[int] = []
+        gs = 1
+        gm = _GROUPS_BRACE_RE.search(line)
+        if gm:
+            group = [int(x) for x in gm.group(1).split(",")]
+            gs = len(group)
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                # replica_groups=[num_groups, group_size]<=[...]
+                gs = int(gi.group(2))
+        crosses = False
+        if pod_size:
+            if group:
+                crosses = len({g // pod_size for g in group}) > 1
+            else:
+                # iota groups: conservatively flag groups larger than a pod, and
+                # permutes whose explicit pairs span pods.
+                crosses = gs > pod_size
+        st = _SOURCE_TARGET_RE.search(line)
+        if pod_size and st:
+            crosses = crosses or (int(st.group(1)) // pod_size != int(st.group(2)) // pod_size)
+        ops.append(CollectiveOp(kind, nbytes, gs, crosses, line.strip()[:160]))
+    return ops
+
+
+def op_wire_bytes(op: CollectiveOp) -> float:
+    """Per-device bytes that actually traverse links (ring-algorithm accounting)."""
+    p = max(op.group_size, 1)
+    frac = (p - 1) / p if p > 1 else 0.0
+    if op.kind == "all-reduce":
+        return 2.0 * frac * op.bytes
+    if op.kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return frac * op.bytes
+    if op.kind == "collective-permute":
+        return float(op.bytes)
+    return float(op.bytes)
+
+
+def collective_seconds(
+    ops: List[CollectiveOp], *, ici_bw: float, dcn_bw: Optional[float] = None
+) -> Dict[str, float]:
+    """Aggregate wire time per device. Returns totals + per-kind breakdown."""
+    out: Dict[str, float] = {"total_s": 0.0, "total_bytes": 0.0, "dcn_s": 0.0, "n_ops": float(len(ops))}
+    for op in ops:
+        wb = op_wire_bytes(op)
+        bw = dcn_bw if (op.crosses_pod and dcn_bw) else ici_bw
+        t = wb / bw
+        out["total_s"] += t
+        out["total_bytes"] += wb
+        if op.crosses_pod and dcn_bw:
+            out["dcn_s"] += t
+        k = f"{op.kind}_s"
+        out[k] = out.get(k, 0.0) + t
+    return out
+
+
+def summarize_collectives(ops: List[CollectiveOp]) -> Dict[str, Dict[str, float]]:
+    """Count + bytes per collective kind (the EXPERIMENTS.md schedule table)."""
+    agg: Dict[str, Dict[str, float]] = {}
+    for op in ops:
+        e = agg.setdefault(op.kind, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        e["count"] += 1
+        e["bytes"] += op.bytes
+        e["wire_bytes"] += op_wire_bytes(op)
+    return agg

@@ -1,0 +1,26 @@
+"""Hardware constants (TPU v5e target, per the assignment brief)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float       # FLOP/s per chip
+    hbm_bw: float                # bytes/s per chip
+    ici_link_bw: float           # bytes/s per link (one direction)
+    ici_links: int               # links per chip participating in a ring
+    hbm_bytes: float             # capacity per chip
+    dcn_bw: float                # bytes/s per chip for cross-pod traffic
+
+
+V5E = HwSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,                 # 2D torus: ±x, ±y
+    hbm_bytes=16 * 1024**3,
+    dcn_bw=6.25e9,               # ~50 Gb/s effective per chip across pods
+)

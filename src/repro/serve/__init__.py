@@ -1,0 +1,2 @@
+"""Serving substrate: batched KV-cache engine over the decode step."""
+from repro.serve.engine import ServeConfig, Engine, sample_token

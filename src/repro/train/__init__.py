@@ -1,0 +1,4 @@
+"""Training substrate: state, jitted steps, trainer loop, sketch-DP integration."""
+from repro.train.state import init_train_state, train_state_shapes, train_state_pspecs
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig

@@ -1,0 +1,69 @@
+"""Sketched linear-head fitting: Algorithm 1 applied verbatim to LM features.
+
+The paper's regression is dense least squares on a tall data matrix; inside an LM
+framework the same problem appears whenever a linear map must be fit onto frozen
+backbone features — classifier probes, value/reward heads, logit-lens calibrations,
+or a cheap lm-head re-fit after vocabulary surgery. The feature matrix H (tokens ×
+d_model) is exactly the paper's A (n ≫ d), so we fit with distributed sketch-and-solve
+and inherit its straggler resilience and privacy accounting (features never leave the
+master un-sketched when privacy mode is on).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import averaging, privacy, sketches as sk, solve
+from repro.utils import prng
+
+
+def extract_features(params, cfg, batch, *, rules=None) -> jax.Array:
+    """Frozen-backbone features: final-norm hidden states, flattened to (B·S, d)."""
+    from repro.models import lm as lm_mod
+
+    x, _, enc_out = lm_mod.embed_inputs(params, cfg, batch, rules=rules)
+    h, _ = lm_mod.trunk(params, cfg, x, rules=rules, enc_out=enc_out, plan=lm_mod.ExecPlan(remat="none"))
+    return h.reshape(-1, cfg.d_model).astype(jnp.float32)
+
+
+def fit_head(
+    key: jax.Array,
+    H: jax.Array,
+    Y: jax.Array,
+    spec: sk.SketchSpec,
+    *,
+    q: int = 16,
+    reg: float = 1e-4,
+    straggler_mask: Optional[jax.Array] = None,
+    accountant: Optional[privacy.PrivacyAccountant] = None,
+) -> jax.Array:
+    """Algorithm 1 on (H, Y): q sketch-and-solve workers (vmapped), masked average.
+
+    Y may be (n,) or (n, k) (multi-output probe). Returns W (d,) or (d, k).
+    """
+    n = H.shape[0]
+    if accountant is not None:
+        gamma = float(jnp.std(H))
+        for w in range(q):
+            accountant.record(spec.m, n, gamma=gamma, tag=f"head-fit worker {w}")
+
+    def worker(widx):
+        wkey = prng.worker_key(key, widx)
+        SH = sk.apply_sketch(spec, wkey, jnp.concatenate([H, Y.reshape(n, -1)], axis=1))
+        d = H.shape[1]
+        return solve.lstsq(SH[:, :d], SH[:, d:], reg=reg)
+
+    Ws = jax.vmap(worker)(jnp.arange(q))  # (q, d, k)
+    W = averaging.masked_average(Ws, straggler_mask)
+    return W.reshape(H.shape[1:] + Y.shape[1:]) if Y.ndim > 1 else W[:, 0]
+
+
+def head_fit_quality(H, Y, W) -> dict:
+    """Residual diagnostics vs the exact solution (small problems / tests)."""
+    Ym = Y.reshape(H.shape[0], -1)
+    W_star = solve.lstsq(H, Ym, reg=1e-4)
+    f = lambda w: float(jnp.sum((H @ w.reshape(H.shape[1], -1) - Ym) ** 2))
+    fs, fw = f(W_star), f(W)
+    return {"f_star": fs, "f_sketch": fw, "rel_err": (fw - fs) / max(fs, 1e-30)}

@@ -1,0 +1,48 @@
+"""Train state = {params, opt, step}: a plain pytree (checkpoint/shard friendly)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingRules, param_pspecs
+from repro.models import lm
+from repro.optim import AdamWConfig, init_opt_state
+
+PyTree = Any
+
+
+def init_train_state(cfg: ArchConfig, opt_cfg: AdamWConfig, key: jax.Array) -> PyTree:
+    params = lm.init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": init_opt_state(opt_cfg, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_shapes(cfg: ArchConfig, opt_cfg: AdamWConfig) -> PyTree:
+    """ShapeDtypeStruct tree — no allocation (dry-run / checkpoint manifests)."""
+    return jax.eval_shape(lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0)))
+
+
+def train_state_pspecs(cfg: ArchConfig, opt_cfg: AdamWConfig, rules: ShardingRules) -> PyTree:
+    """PartitionSpecs for the whole state: opt moments inherit their param's spec."""
+    shapes = train_state_shapes(cfg, opt_cfg)
+    pspecs = param_pspecs(shapes["params"], rules)
+    return {
+        "params": pspecs,
+        "opt": {"mu": pspecs, "nu": pspecs, "count": P()},
+        "step": P(),
+    }
+
+
+def train_state_shardings(cfg: ArchConfig, opt_cfg: AdamWConfig, mesh: Mesh, rules: ShardingRules):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        train_state_pspecs(cfg, opt_cfg, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,107 @@
+"""Jitted train step: loss → grads → AdamW, with microbatch gradient accumulation.
+
+This is the GSPMD path: gradients are averaged across data-parallel shards by the
+compiler (the batch is dp-sharded, the loss is a mean → XLA inserts the reduce).
+The sketch-compressed / straggler-masked DP variant lives in ``sketch_dp.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingRules, param_pspecs
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_update
+
+PyTree = Any
+
+
+def _constrain_like_params(grads: PyTree, rules: Optional[ShardingRules]) -> PyTree:
+    """Pin gradients to their parameters' sharding.
+
+    Perf: with FSDP/TP-sharded params, this turns the data-parallel gradient
+    exchange into a *reduce-scatter* to the owning shard (wire bytes halve vs a full
+    all-reduce and the result is 1/|data| per device) — iteration 2 of §Perf.
+    """
+    if rules is None:
+        return grads
+    specs = param_pspecs(grads, rules)
+    return jax.tree_util.tree_map(
+        lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, specs
+    )
+
+
+def make_loss_fn(cfg: ArchConfig, *, rules=None, plan: Optional[lm.ExecPlan] = None):
+    plan = plan or lm.ExecPlan()
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, cfg, batch, rules=rules, plan=plan)
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    rules: Optional[ShardingRules] = None,
+    schedule: Optional[Callable] = None,
+    plan: Optional[lm.ExecPlan] = None,
+    remat: str = "full",
+    accum_steps: int = 1,
+    accum_dtype: str = "float32",
+) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure, jit-ready).
+
+    accum_steps > 1 splits the batch's leading dim into microbatches and accumulates
+    gradients in a lax.scan — peak activation memory divides by accum_steps while
+    arithmetic is unchanged. ``accum_dtype``: the accumulator buffer is param-count
+    sized (grok-314b: 4.9 GiB/chip in f32 even at 256-way sharding); bf16 halves it
+    at a precision cost bounded by 1/accum_steps ulp per microbatch.
+    """
+    plan = plan or lm.ExecPlan(remat=remat)
+    acc_dt = jnp.bfloat16 if accum_dtype == "bfloat16" else jnp.float32
+    loss_fn = make_loss_fn(cfg, rules=rules, plan=plan)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, _constrain_like_params(grads, rules)
+
+        def split(x):
+            B = x.shape[0]
+            mb = B // accum_steps
+            return x.reshape((accum_steps, mb) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, aux_acc, gacc = carry
+            (loss, aux), g = grad_fn(params, mb)
+            g = _constrain_like_params(g, rules)
+            gacc = jax.tree_util.tree_map(lambda a, b: (a.astype(jnp.float32) + b.astype(jnp.float32)).astype(acc_dt), gacc, g)
+            return (loss_acc + loss, {"ce": aux_acc["ce"] + aux["ce"], "moe_aux": aux_acc["moe_aux"] + aux["moe_aux"]}, gacc), None
+
+        g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        z = jnp.zeros((), jnp.float32)
+        (loss, aux, gacc), _ = jax.lax.scan(body, (z, {"ce": z, "moe_aux": z}, g0), micro)
+        inv = 1.0 / accum_steps
+        grads = jax.tree_util.tree_map(lambda g: g * inv, gacc)
+        return loss * inv, jax.tree_util.tree_map(lambda a: a * inv, aux), grads
+
+    def train_step(state, batch):
+        loss, aux, grads = compute_grads(state["params"], batch)
+        lr_scale = schedule(state["step"]) if schedule is not None else 1.0
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"], lr_scale=lr_scale
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, **aux, **om}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,38 @@
+"""PRNG helpers.
+
+All randomness in the framework flows through explicit jax PRNG keys. Workers derive
+their keys by folding in a (worker_id, round) pair so that any worker can be restarted /
+replaced and will regenerate exactly the same sketch — this is what makes the
+sketch-and-solve workers true i.i.d. *stateless* copies of each other (the paper's
+serverless model) and what makes checkpoint-restart deterministic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def worker_key(base_key: jax.Array, worker_id: jax.Array | int, round_id: int = 0) -> jax.Array:
+    """Deterministic per-(worker, round) key. Safe to call inside shard_map/vmap."""
+    k = jax.random.fold_in(base_key, round_id)
+    return jax.random.fold_in(k, worker_id)
+
+
+def split_tree(key: jax.Array, tree) -> "jax.tree_util.PyTreeDef":
+    """One independent key per leaf of ``tree``, with the tree's structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def uniform_to_gaussian(u1: jax.Array, u2: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Box-Muller: two uniforms in (0,1) -> two independent standard normals."""
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = (2.0 * jnp.pi) * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def bits_to_open_unit(bits: jax.Array) -> jax.Array:
+    """uint32 bits -> float32 in the open interval (0, 1) (never exactly 0)."""
+    # 2**-32 ~ 2.33e-10; offset by half a ULP so log() is finite.
+    return (bits.astype(jnp.float32) + 0.5) * jnp.float32(2.0**-32)

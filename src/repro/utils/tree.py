@@ -1,0 +1,61 @@
+"""Pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_flatten_to_vector(tree) -> tuple[jax.Array, "TreeVectorizer"]:
+    """Concatenate all leaves into one f32 vector, with an inverter."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [x.shape for x in leaves]
+    dtypes = [x.dtype for x in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+    return vec, TreeVectorizer(treedef, shapes, dtypes, sizes)
+
+
+class TreeVectorizer:
+    """Inverse of :func:`tree_flatten_to_vector` (static metadata, jit-closable)."""
+
+    def __init__(self, treedef, shapes, dtypes, sizes):
+        self.treedef = treedef
+        self.shapes = shapes
+        self.dtypes = dtypes
+        self.sizes = sizes
+        self.total = sum(sizes)
+
+    def unflatten(self, vec: jax.Array):
+        leaves = []
+        off = 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            leaves.append(vec[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)

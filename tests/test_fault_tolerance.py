@@ -1,0 +1,58 @@
+"""Fault tolerance: straggler policies, heartbeat stats, solver head-fit quality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import privacy, sketches as sk
+from repro.distributed.fault_tolerance import HeartbeatMonitor, StragglerPolicy
+from repro.train import solvers
+
+
+def test_straggler_policy_deterministic_per_step():
+    pol = StragglerPolicy(drop_prob=0.3, seed=42)
+    a = pol.mask_for_step(5, 64)
+    b = pol.mask_for_step(5, 64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = pol.mask_for_step(6, 64)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_heartbeat_monitor_report():
+    mon = HeartbeatMonitor(q=8, deadline=1.0)
+    rt = np.array([0.5, 0.6, 0.7, 0.8, 0.9, 1.1, 1.5, 0.4])
+    mask = mon.record_step(rt)
+    assert mask.sum() == 6
+    rep = mon.report()
+    assert rep["on_time_fraction"] == 6 / 8
+    assert rep["effective_q"] == 6.0
+    assert rep["p95_runtime"] >= rep["mean_runtime"]
+
+
+def test_fit_head_converges_to_exact():
+    key = jax.random.PRNGKey(0)
+    n, d, k = 4096, 16, 3
+    H = jax.random.normal(key, (n, d))
+    W_true = jax.random.normal(jax.random.PRNGKey(1), (d, k))
+    Y = H @ W_true + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (n, k))
+    spec = sk.SketchSpec("gaussian", 8 * d)
+    acc = privacy.PrivacyAccountant()
+    W = solvers.fit_head(key, H, Y, spec, q=16, accountant=acc)
+    quality = solvers.head_fit_quality(H, Y, W)
+    assert quality["rel_err"] < 0.05, quality
+    assert len(acc.disclosures) == 16
+
+
+def test_fit_head_straggler_mask():
+    key = jax.random.PRNGKey(0)
+    n, d = 1024, 8
+    H = jax.random.normal(key, (n, d))
+    # noisy target: f* must be bounded away from 0 or rel_err is ill-conditioned
+    y = H @ jax.random.normal(jax.random.PRNGKey(1), (d,)) + jax.random.normal(
+        jax.random.PRNGKey(2), (n,)
+    )
+    spec = sk.SketchSpec("gaussian", 8 * d)
+    mask = jnp.array([1.0] * 4 + [0.0] * 4)
+    W = solvers.fit_head(key, H, y, spec, q=8, straggler_mask=mask)
+    assert np.isfinite(np.asarray(W)).all()
+    q = solvers.head_fit_quality(H, y, W)
+    assert q["rel_err"] < 0.2

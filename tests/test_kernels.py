@@ -1,0 +1,188 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import common
+from repro.kernels.fwht import ops as fwht_ops, ref as fwht_ref
+from repro.kernels.sjlt import ops as sjlt_ops, ref as sjlt_ref
+from repro.kernels.gaussian import ops as g_ops, ref as g_ref
+
+
+# ------------------------------------------------------------------ common
+
+
+def test_hadamard_matrix_orthogonal():
+    for k in (1, 2, 4, 64, 128):
+        H = np.asarray(common.hadamard_matrix(k))
+        np.testing.assert_allclose(H @ H.T, k * np.eye(k), atol=0)
+
+
+def test_threefry_is_deterministic_and_uniformish():
+    c0 = jnp.arange(1 << 14, dtype=jnp.uint32)
+    c1 = jnp.zeros_like(c0)
+    a0, a1 = common.threefry2x32(jnp.uint32(1), jnp.uint32(2), c0, c1)
+    b0, _ = common.threefry2x32(jnp.uint32(1), jnp.uint32(2), c0, c1)
+    assert jnp.array_equal(a0, b0)
+    u = common.bits_to_open_unit(a0)
+    assert 0.45 < float(u.mean()) < 0.55
+    assert float(u.min()) > 0.0 and float(u.max()) < 1.0
+    # different key → different stream
+    d0, _ = common.threefry2x32(jnp.uint32(1), jnp.uint32(3), c0, c1)
+    assert not jnp.array_equal(a0, d0)
+
+
+def test_counter_normal_moments():
+    c0 = jnp.arange(1 << 15, dtype=jnp.uint32)
+    z = common.counter_normal(jnp.uint32(5), jnp.uint32(9), c0, c0 * jnp.uint32(7919))
+    assert abs(float(z.mean())) < 0.02
+    assert abs(float(z.std()) - 1.0) < 0.02
+
+
+# ------------------------------------------------------------------ fwht
+
+
+@pytest.mark.parametrize("n", [2, 8, 128, 256, 1024, 8192])
+@pytest.mark.parametrize("d", [1, 7, 128, 300])
+def test_fwht_matches_ref(n, d):
+    x = jax.random.normal(jax.random.PRNGKey(n * 1000 + d), (n, d), dtype=jnp.float32)
+    got = fwht_ops.fwht(x)
+    want = fwht_ref.fwht(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 128)).astype(dtype)
+    got = fwht_ops.fwht(x)
+    assert got.dtype == dtype
+    want = fwht_ref.fwht(x.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol * 512
+    )
+
+
+def test_fwht_multipass_kronecker():
+    """n large enough to trigger the two-pass (cross-tile) path."""
+    n = 2 * fwht_ops.MAX_TILE_ROWS
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, 4), dtype=jnp.float32)
+    got = fwht_ops.fwht(x)
+    want = fwht_ref.fwht(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-2)
+
+
+def test_fwht_is_involution_up_to_n():
+    n, d = 256, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    twice = fwht_ops.fwht(fwht_ops.fwht(x))
+    np.testing.assert_allclose(np.asarray(twice), n * np.asarray(x), rtol=1e-4, atol=1e-2)
+
+
+def test_fwht_vector_input():
+    x = jax.random.normal(jax.random.PRNGKey(2), (64,))
+    got = fwht_ops.fwht(x)
+    want = fwht_ref.fwht(x[:, None])[:, 0]
+    assert got.shape == (64,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------------ sjlt
+
+
+@pytest.mark.parametrize("n,d,m,s", [
+    (100, 7, 32, 1),
+    (256, 128, 64, 4),
+    (1000, 33, 200, 2),
+    (4096, 256, 512, 8),
+    (777, 130, 1000, 4),   # m > BLOCK_M boundary-ish and unaligned everything
+])
+def test_sjlt_matches_ref(n, d, m, s):
+    key = jax.random.PRNGKey(n + d + m + s)
+    A = jax.random.normal(jax.random.fold_in(key, 1), (n, d), dtype=jnp.float32)
+    buckets, signs = sjlt_ops.sjlt_params(key, n, s, m)
+    got = sjlt_ops.sjlt_apply(A, buckets, signs, m)
+    want = sjlt_ref.sjlt_apply(A, buckets, signs, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_sjlt_kernel_path_equals_core_path():
+    """core.sketches sjlt (segment_sum) and the kernel draw the same S per key."""
+    from repro.core import sketches as sk
+
+    key = jax.random.PRNGKey(42)
+    A = jax.random.normal(jax.random.PRNGKey(1), (300, 40))
+    a = sk.sjlt_sketch(key, A, 64, s=4, use_kernel=False)
+    b = sjlt_ops.sjlt_sketch(key, A, 64, s=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)
+
+
+def test_sjlt_embedding_property():
+    """E[SᵀS]=I: norms preserved in expectation."""
+    n, d, m, s = 512, 8, 256, 4
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    norms = []
+    for t in range(20):
+        SA = sjlt_ops.sjlt_sketch(jax.random.PRNGKey(t), A, m, s=s)
+        norms.append(float(jnp.linalg.norm(SA) ** 2))
+    true = float(jnp.linalg.norm(A) ** 2)
+    assert abs(np.mean(norms) / true - 1.0) < 0.1
+
+
+# ------------------------------------------------------------------ gaussian
+
+
+@pytest.mark.parametrize("n,d,m", [
+    (64, 8, 16),
+    (300, 130, 100),
+    (1024, 256, 512),
+    (513, 1, 300),
+])
+def test_gaussian_kernel_matches_ref(n, d, m):
+    key = jax.random.PRNGKey(n * 7 + d * 3 + m)
+    A = jax.random.normal(jax.random.fold_in(key, 1), (n, d), dtype=jnp.float32)
+    got = g_ops.gaussian_sketch(key, A, m)
+    want = g_ref.gaussian_sketch(key, A, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_gaussian_kernel_statistics():
+    """Entries of the implied S are N(0, 1/m): check via S = sketch of I."""
+    n, m = 256, 128
+    S = g_ops.gaussian_sketch(jax.random.PRNGKey(9), jnp.eye(n), m)
+    z = np.asarray(S).ravel() * math.sqrt(m)
+    assert abs(z.mean()) < 0.02
+    assert abs(z.std() - 1.0) < 0.02
+    # normality sanity: 4th moment ≈ 3
+    assert abs((z**4).mean() - 3.0) < 0.3
+
+
+def test_gaussian_kernel_grid_order_invariance():
+    """Counter-based RNG ⇒ the same (key, i, j) element regardless of blocking."""
+    key = jax.random.PRNGKey(3)
+    A = jax.random.normal(jax.random.PRNGKey(4), (700, 60))
+    full = g_ref.sketch_matrix(key, 96, 700)
+    got = g_ops.gaussian_sketch(key, A, 96)
+    want = full @ np.asarray(A)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_gaussian_kernel_unbiased_solver_error():
+    """End-to-end: kernel-sketched solve obeys Lemma 1 like the jnp path."""
+    from repro.core import solve, theory
+
+    n, d, m = 2048, 10, 64
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    b = A @ jnp.ones((d,)) + jax.random.normal(jax.random.PRNGKey(1), (n,))
+    xstar = solve.lstsq(A, b)
+    fstar = float(solve.residual_cost(A, b, xstar))
+    errs = []
+    for t in range(60):
+        SA = g_ops.gaussian_sketch(jax.random.PRNGKey(t), jnp.concatenate([A, b[:, None]], 1), m)
+        x = solve.lstsq(SA[:, :-1], SA[:, -1])
+        errs.append(float(solve.relative_error(A, b, x, fstar)))
+    pred = theory.gaussian_single_error(m, d)
+    assert 0.6 < np.mean(errs) / pred < 1.6

@@ -1,0 +1,201 @@
+"""Per-arch smoke + layer-level references (MoE dispatch, SSM scan, attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED
+from repro.configs.base import get_config
+from repro.models import attention, layers, lm, moe as moe_lib, ssm as ssm_lib
+from repro.optim import AdamWConfig
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.vlm:
+        batch["patches"] = jax.random.normal(key, (B, cfg.num_image_tokens, cfg.vit_dim), jnp.float32)
+    if cfg.encdec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_smoke_one_train_step(arch):
+    """REQUIRED smoke test: reduced config, one forward+backward+update on CPU,
+    asserting output shapes and no NaNs."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, AdamWConfig(lr=1e-3), key)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+    batch = _batch(cfg, key)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed & stayed finite
+    before = jax.tree_util.tree_leaves(state["params"])
+    after = jax.tree_util.tree_leaves(new_state["params"])
+    changed = any(not np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(before, after))
+    assert changed
+    assert all(np.isfinite(np.asarray(x, dtype=np.float32)).all() for x in after)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_forward_shapes(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    B, S = 2, 12
+    batch = _batch(cfg, key, B, S)
+    logits = lm.forward_logits(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_moe_dispatch_matches_dense_fallback():
+    """Sort-based capacity dispatch == dense all-experts path when capacity is
+    unconstrained."""
+    key = jax.random.PRNGKey(0)
+    G, T, d, f, E, k = 2, 16, 8, 16, 4, 2
+    params = moe_lib.init_moe(key, d, f, E, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (G, T, d))
+    out_d, aux_d = moe_lib.moe_dense_fallback(params, x, num_experts=E, top_k=k)
+    out_s, aux_s = moe_lib.moe_forward(params, x, num_experts=E, top_k=k, capacity_factor=float(E))
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_d), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_s), float(aux_d), rtol=1e-5)
+
+
+def test_moe_capacity_drops_are_partial():
+    key = jax.random.PRNGKey(0)
+    G, T, d, f, E, k = 1, 32, 8, 16, 4, 2
+    params = moe_lib.init_moe(key, d, f, E, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (G, T, d))
+    out_tight, _ = moe_lib.moe_forward(params, x, num_experts=E, top_k=k, capacity_factor=0.5)
+    out_loose, _ = moe_lib.moe_forward(params, x, num_experts=E, top_k=k, capacity_factor=float(E))
+    # capacity drops change some token outputs but keep everything finite
+    assert np.isfinite(np.asarray(out_tight)).all()
+    assert not np.allclose(np.asarray(out_tight), np.asarray(out_loose))
+
+
+def test_ssm_chunked_scan_matches_naive():
+    B, T, C, N = 2, 37, 4, 8
+    key = jax.random.PRNGKey(0)
+    dA = jax.random.uniform(key, (B, T, C, N), minval=0.7, maxval=0.99)
+    dBu = jax.random.normal(jax.random.PRNGKey(1), (B, T, C, N)) * 0.1
+    h0 = jnp.zeros((B, C, N))
+    hs, hT = ssm_lib._ssm_scan_chunked(dA, dBu, h0, chunk=8)
+    # naive recurrence
+    h = h0
+    outs = []
+    for t in range(T):
+        h = dA[:, t] * h + dBu[:, t]
+        outs.append(h)
+    naive = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(naive), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(naive[:, -1]), rtol=1e-4, atol=1e-5)
+
+
+def test_mamba_decode_matches_forward():
+    d, state, dt_rank = 16, 4, 2
+    cfg_like = dict(d_inner=32, state=state, d_conv=4, dt_rank=dt_rank)
+    key = jax.random.PRNGKey(0)
+    params = ssm_lib.init_mamba(key, d, dtype=jnp.float32, **cfg_like)
+    B, T = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, d)) * 0.5
+    full = ssm_lib.mamba_forward(params, x, state=state, dt_rank=dt_rank, chunk=4)
+    conv = jnp.zeros((B, 3, 32))
+    ssm_state = jnp.zeros((B, 32, state))
+    outs = []
+    for t in range(T):
+        o, conv, ssm_state = ssm_lib.mamba_decode(
+            params, x[:, t : t + 1], conv, ssm_state, state=state, dt_rank=dt_rank
+        )
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_matches_naive_softmax():
+    B, S, H, KV, hd = 2, 33, 4, 2, 8
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    out = attention.chunked_attention(q, k, v, causal=True, chunk=8)
+    # naive reference
+    G = H // KV
+    qf = q.reshape(B, S, KV, G, hd) / np.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qf, k)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bqkgs,bskh->bqkgh", p, v).reshape(B, S, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_attention_masks_past():
+    B, S, H, hd, W = 1, 16, 2, 4, 4
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+    out_w = attention.chunked_attention(q, k, v, causal=True, window=W, chunk=8)
+    # last query must ignore keys before S-W: perturbing them changes nothing
+    k2 = k.at[:, : S - W].set(jax.random.normal(jax.random.PRNGKey(3), (B, S - W, H, hd)))
+    v2 = v.at[:, : S - W].set(jax.random.normal(jax.random.PRNGKey(4), (B, S - W, H, hd)))
+    out_w2 = attention.chunked_attention(q, k2, v2, causal=True, window=W, chunk=8)
+    np.testing.assert_allclose(
+        np.asarray(out_w[:, -1]), np.asarray(out_w2[:, -1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rope_preserves_norm_and_relativity():
+    S, H, hd = 8, 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, S, H, hd))
+    cos, sin = layers.rope_angles(jnp.arange(S), hd, 1e4)
+    y = layers.apply_rope(x, cos[None], sin[None])
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)), np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5
+    )
+    # relative property: <R_i q, R_j k> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (hd,))
+    k = jax.random.normal(jax.random.PRNGKey(2), (hd,))
+
+    def dot(i, j):
+        ci, si = layers.rope_angles(jnp.arange(max(i, j) + 1), hd, 1e4)
+        qr = layers.apply_rope(q[None, None, None, :], ci[None], si[None])[0, i % 1]  # dummy
+        return qr
+
+    c, s = layers.rope_angles(jnp.arange(10), hd, 1e4)
+    qs = layers.apply_rope(jnp.broadcast_to(q, (1, 10, 1, hd)), c[None], s[None])
+    ks = layers.apply_rope(jnp.broadcast_to(k, (1, 10, 1, hd)), c[None], s[None])
+    d1 = float(jnp.vdot(qs[0, 5, 0], ks[0, 3, 0]))
+    d2 = float(jnp.vdot(qs[0, 7, 0], ks[0, 5, 0]))
+    assert abs(d1 - d2) < 1e-4
+
+
+def test_layer_windows_gemma_pattern():
+    cfg = get_config("gemma3-12b")
+    w = np.asarray(lm.layer_windows(cfg))
+    assert w.shape == (48,)
+    assert (w[:5] == 1024).all() and w[5] == 0
+    assert w.sum() == 1024 * 40
+
+
+def test_chunked_ce_matches_full():
+    B, S, d, V = 2, 17, 8, 32
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, S, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, V))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+    mask = (jax.random.uniform(jax.random.PRNGKey(3), (B, S)) > 0.3).astype(jnp.float32)
+    got = lm.chunked_ce_loss(h, w, labels, mask, chunk=5)
+    logits = h @ w
+    ref = layers.cross_entropy_loss(logits, labels, mask)
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)

@@ -1,0 +1,44 @@
+"""Eq. (5) privacy accounting."""
+import math
+
+import pytest
+
+from repro.core import privacy
+
+
+def test_paper_airline_number():
+    v = privacy.mi_per_entry_bound(int(5e5), int(1.21e8), gamma=1.0)
+    assert abs(v - 1.17e-2) < 2e-4  # the paper's §VI-A evaluation
+
+
+def test_bound_scales_linearly_in_m():
+    a = privacy.mi_per_entry_bound(100, 10_000)
+    b = privacy.mi_per_entry_bound(200, 10_000)
+    assert abs(b - 2 * a) < 1e-12
+
+
+def test_bound_vanishes_as_n_grows():
+    vals = [privacy.mi_per_entry_bound(64, n) for n in (10**3, 10**5, 10**7)]
+    assert vals[0] > vals[1] > vals[2]
+    assert vals[2] < 1e-4
+
+
+def test_sketch_dim_inversion_consistent():
+    n = 10**6
+    m = privacy.sketch_dim_for_privacy(n, 0.01)
+    assert privacy.mi_per_entry_bound(m, n) <= 0.0100001
+    assert privacy.mi_per_entry_bound(m + 2, n) > 0.01
+
+
+def test_accountant_composition():
+    acc = privacy.PrivacyAccountant()
+    for _ in range(10):
+        acc.record(100, 10_000)
+    single = privacy.mi_per_entry_bound(100, 10_000)
+    assert abs(acc.total_per_entry_nats - 10 * single) < 1e-12
+    assert "TOTAL" in acc.report()
+
+
+def test_invalid_inputs():
+    with pytest.raises(ValueError):
+        privacy.mi_per_entry_bound(0, 10)

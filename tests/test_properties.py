@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import averaging, privacy, sketches as sk
+from repro.kernels import common as kcommon
+from repro.models import layers
+from repro.utils import tree as tu
+
+jax.config.update("jax_enable_x64", False)
+FAST = settings(max_examples=20, deadline=None)
+
+
+@FAST
+@given(
+    n=st.integers(8, 128),
+    d=st.integers(1, 16),
+    kind=st.sampled_from(["gaussian", "uniform", "sjlt", "srht"]),
+    seed=st.integers(0, 2**20),
+)
+def test_sketch_shape_contract(n, d, kind, seed):
+    m = max(4, n // 2)
+    A = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    SA = sk.apply_sketch(sk.SketchSpec(kind, m), jax.random.PRNGKey(seed + 1), A)
+    assert SA.shape == (m, d)
+    assert bool(jnp.isfinite(SA).all())
+
+
+@FAST
+@given(q=st.integers(1, 16), d=st.integers(1, 8), seed=st.integers(0, 2**20))
+def test_masked_average_permutation_invariant(q, d, seed):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (q, d))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (q,)) > 0.4).astype(jnp.float32)
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), q)
+    a = averaging.masked_average(xs, mask)
+    b = averaging.masked_average(xs[perm], mask[perm])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+@FAST
+@given(
+    shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1, max_size=4),
+    seed=st.integers(0, 2**20),
+)
+def test_tree_vectorizer_roundtrip(shapes, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), s) for i, s in enumerate(shapes)}
+    vec, vz = tu.tree_flatten_to_vector(tree)
+    back = vz.unflatten(vec)
+    for a, b in zip(jax.tree_util.tree_leaves(back), jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@FAST
+@given(k=st.sampled_from([1, 2, 4, 8, 64, 128]))
+def test_hadamard_orthogonality(k):
+    H = np.asarray(kcommon.hadamard_matrix(k))
+    np.testing.assert_array_equal(H @ H.T, k * np.eye(k))
+
+
+@FAST
+@given(
+    s=st.integers(2, 64),
+    hd=st.sampled_from([4, 8, 16]),
+    frac=st.sampled_from([0.5, 1.0]),
+    seed=st.integers(0, 2**20),
+)
+def test_rope_norm_preservation(s, hd, frac, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, s, 2, hd))
+    cos, sin = layers.rope_angles(jnp.arange(s), int(hd * frac) & ~1, 1e4)
+    y = layers.apply_rope(x, cos[None], sin[None], frac)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        rtol=1e-4,
+    )
+
+
+@FAST
+@given(m=st.integers(1, 10**6), n=st.integers(1, 10**9))
+def test_privacy_bound_monotone(m, n):
+    v = privacy.mi_per_entry_bound(m, n)
+    assert v >= 0
+    assert privacy.mi_per_entry_bound(m + 1, n) >= v
+    assert privacy.mi_per_entry_bound(m, n + 1) <= v or n > 10**8  # fp slack at huge n
+
+
+@FAST
+@given(pos=st.integers(0, 10_000), s_cache=st.sampled_from([4, 16, 64, 512]))
+def test_ring_slot_invariants(pos, s_cache):
+    """Ring-cache math: the slot being written always maps back to `pos`, and every
+    valid slot holds a position in (pos - s_cache, pos]."""
+    from repro.models.lm import _ring_update_and_scores_mask
+
+    slot, valid = _ring_update_and_scores_mask(jnp.int32(pos), s_cache)
+    idx = np.arange(s_cache)
+    ages = np.mod(pos - idx, s_cache)
+    k_pos = pos - ages
+    assert int(slot) == pos % s_cache
+    assert k_pos[int(slot)] == pos
+    v = np.asarray(valid)
+    assert (k_pos[v] > pos - s_cache).all() and (k_pos[v] <= pos).all()
+    assert (k_pos[~v] < 0).all()
+
+
+@FAST
+@given(vocab=st.integers(1, 300_000))
+def test_padded_vocab_properties(vocab):
+    import dataclasses
+
+    from repro.configs.base import get_config
+
+    cfg = dataclasses.replace(get_config("granite-3-8b"), vocab_size=vocab)
+    pv = cfg.padded_vocab
+    assert pv >= vocab and pv % 256 == 0 and pv - vocab < 256

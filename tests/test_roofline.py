@@ -1,0 +1,95 @@
+"""Roofline helpers: HLO collective parsing, wire-byte model, extrapolation."""
+import numpy as np
+
+from repro.roofline import collectives as C
+from repro.roofline.hw import V5E
+from repro.roofline.model import model_flops_for, roofline_terms
+
+HLO = """
+ENTRY %main {
+  %ag = f32[4096,512]{1,0} all-gather(%x), channel_id=1, replica_groups={{0,1,2,3}}, dimensions={1}
+  %ar = bf16[1024]{0} all-reduce(%y), channel_id=2, replica_groups=[32,16]<=[512], use_global_device_ids=true
+  %rs = f32[256,128]{1,0} reduce-scatter(%z), channel_id=3, replica_groups={{0,256}}, dimensions={0}
+  %cp = f32[64]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,256},{256,0}}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%p, %q), replica_groups={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    ops = C.parse_collectives(HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all", "collective-permute", "reduce-scatter"]
+    by = {o.kind: o for o in ops}
+    assert by["all-gather"].bytes == 4096 * 512 * 4
+    assert by["all-gather"].group_size == 4
+    assert by["all-reduce"].bytes == 1024 * 2
+    assert by["all-reduce"].group_size == 16  # iota [32,16]
+    assert by["all-to-all"].bytes == 2 * 16 * 16 * 4  # tuple shapes summed
+
+
+def test_pod_crossing_detection():
+    ops = C.parse_collectives(HLO, pod_size=256)
+    by = {o.kind: o for o in ops}
+    assert by["reduce-scatter"].crosses_pod  # group {0,256}
+    assert by["collective-permute"].crosses_pod  # pair (0,256)
+    assert not by["all-gather"].crosses_pod  # group {0..3}
+
+
+def test_wire_bytes_model():
+    ops = C.parse_collectives(HLO)
+    by = {o.kind: o for o in ops}
+    # all-reduce: 2*(P-1)/P * bytes
+    np.testing.assert_allclose(C.op_wire_bytes(by["all-reduce"]), 2 * 15 / 16 * 2048)
+    # all-gather: (P-1)/P * bytes
+    np.testing.assert_allclose(C.op_wire_bytes(by["all-gather"]), 3 / 4 * 4096 * 512 * 4)
+    # permute: raw bytes
+    np.testing.assert_allclose(C.op_wire_bytes(by["collective-permute"]), 64 * 4)
+
+
+def test_collective_seconds_dcn_split():
+    ops = C.parse_collectives(HLO, pod_size=256)
+    res = C.collective_seconds(ops, ici_bw=V5E.ici_link_bw, dcn_bw=V5E.dcn_bw)
+    assert res["total_s"] > 0 and res["dcn_s"] > 0
+    assert res["dcn_s"] <= res["total_s"]
+
+
+def test_roofline_terms_bottleneck():
+    rr = roofline_terms(
+        arch="x", shape="train_4k", mesh="pod16x16", chips=256,
+        cost={"flops": 1e12, "bytes accessed": 1e9},
+        hlo_text=HLO, model_flops=1e14,
+    )
+    assert rr.compute_s == 1e12 / V5E.peak_flops_bf16
+    assert rr.memory_s == 1e9 / V5E.hbm_bw
+    assert rr.bottleneck in ("compute", "memory", "collective")
+    assert 0 < rr.roofline_fraction <= 1.0
+
+
+def test_model_flops_modes():
+    from repro.configs.base import SHAPES, get_config
+
+    cfg = get_config("mixtral-8x7b")
+    t = model_flops_for(cfg, SHAPES["train_4k"], mode="train")
+    p = model_flops_for(cfg, SHAPES["prefill_32k"], mode="prefill")
+    d = model_flops_for(cfg, SHAPES["decode_32k"], mode="decode")
+    assert t > p > d > 0
+    # MoE: active < total params
+    assert cfg.active_param_count() < cfg.param_count()
+    dense = get_config("granite-3-8b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+def test_extrapolation_math():
+    from repro.roofline import model as dr
+
+    assert dr.extrapolate(10.0, 20.0, 1, 2, 40) == 10.0 + 10.0 * 39
+    cost, agg = dr.extrapolate_cell(
+        {"flops": 100.0}, {"flops": 150.0},
+        {"all-reduce": {"count": 2, "bytes": 10.0, "wire_bytes": 10.0, "dcn_wire_bytes": 0.0}},
+        {"all-reduce": {"count": 3, "bytes": 15.0, "wire_bytes": 15.0, "dcn_wire_bytes": 0.0}},
+        1, 2, 10,
+    )
+    assert cost["flops"] == 100.0 + 50.0 * 9
+    assert agg["all-reduce"]["count"] == 2 + 1 * 9

@@ -1,0 +1,118 @@
+"""Sketch-operator invariants: E[SᵀS] = I, shapes, scaling, determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketches as sk
+from repro.utils import prng
+
+KINDS_SIMPLE = ["gaussian", "srht", "uniform", "leverage", "sjlt"]
+
+
+def _spec(kind, m, n):
+    if kind == "hybrid":
+        return sk.SketchSpec("hybrid", m, m_prime=min(2 * m, n), inner="gaussian")
+    return sk.SketchSpec(kind, m)
+
+
+@pytest.mark.parametrize("kind", KINDS_SIMPLE + ["hybrid"])
+def test_shapes_and_determinism(kind):
+    n, d, m = 64, 8, 32
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    spec = _spec(kind, m, n)
+    key = jax.random.PRNGKey(1)
+    SA1 = sk.apply_sketch(spec, key, A)
+    SA2 = sk.apply_sketch(spec, key, A)
+    assert SA1.shape == (m, d)
+    np.testing.assert_array_equal(np.asarray(SA1), np.asarray(SA2))
+    SA3 = sk.apply_sketch(spec, jax.random.PRNGKey(2), A)
+    assert not np.allclose(np.asarray(SA1), np.asarray(SA3))
+
+
+@pytest.mark.parametrize("kind", KINDS_SIMPLE)
+def test_identity_in_expectation(kind):
+    """E[SᵀS] = I_n — the normalization all of the paper's lemmas assume."""
+    n, m, trials = 24, 96, 300
+    if kind == "leverage":
+        # leverage scores need a concrete A; use a mildly non-uniform one
+        A = jax.random.normal(jax.random.PRNGKey(5), (n, 6)) * jnp.linspace(0.5, 2.0, n)[:, None]
+        scores = sk.leverage_scores(A)
+
+        def one(i):
+            key = prng.worker_key(jax.random.PRNGKey(0), i)
+            S = sk.leverage_sketch(key, jnp.eye(n), m, scores=scores)
+            return S.T @ S
+    else:
+        spec = _spec(kind, m, n)
+
+        def one(i):
+            key = prng.worker_key(jax.random.PRNGKey(0), i)
+            S = sk.materialize(spec, key, n)
+            return S.T @ S
+
+    G = jnp.mean(jax.lax.map(one, jnp.arange(trials), batch_size=32), axis=0)
+    err = float(jnp.max(jnp.abs(G - jnp.eye(n))))
+    # MC error ~ 1/sqrt(trials·m); generous envelope
+    assert err < 0.35, (kind, err)
+
+
+def test_sketch_data_same_S():
+    """(SA, Sb) must use the same S (Algorithm 1): sketching [A|b] jointly."""
+    n, d, m = 128, 8, 32
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    spec = sk.SketchSpec("gaussian", m)
+    key = jax.random.PRNGKey(2)
+    SA, Sb = sk.sketch_data(spec, key, A, b)
+    S = sk.materialize(spec, key, n)
+    np.testing.assert_allclose(np.asarray(SA), np.asarray(S @ A), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Sb), np.asarray(S @ b), rtol=1e-4, atol=1e-4)
+
+
+def test_srht_orthogonality_exact():
+    """For m = n_pad = n, SRHT is orthogonal-up-to-sampling: SᵀS has E=I but each
+    realization satisfies ‖Sx‖ concentrated; check the Hadamard core is orthonormal."""
+    n = 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 3))
+    from repro.core.sketches import _fwht
+
+    Hx = _fwht(x)
+    np.testing.assert_allclose(
+        np.asarray(_fwht(Hx)) / n, np.asarray(x), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_uniform_without_replacement_no_duplicates():
+    n, m = 64, 32
+    key = jax.random.PRNGKey(0)
+    S = sk.materialize(sk.SketchSpec("uniform", m, replacement=False), key, n)
+    rows = np.asarray(jnp.argmax(jnp.abs(S), axis=1))
+    assert len(set(rows.tolist())) == m
+
+
+def test_leverage_scores_sum_to_rank():
+    A = jax.random.normal(jax.random.PRNGKey(0), (50, 7))
+    for method in ("qr", "svd", "approx"):
+        s = sk.leverage_scores(A, method=method)
+        assert abs(float(jnp.sum(s)) - 7.0) < (0.05 if method != "approx" else 0.8)
+
+
+def test_sjlt_column_sparsity():
+    n, m, s = 32, 16, 3
+    S = sk.materialize(sk.SketchSpec("sjlt", m, s=s), jax.random.PRNGKey(0), n)
+    nnz_per_col = np.asarray((np.abs(np.asarray(S)) > 0).sum(axis=0))
+    assert (nnz_per_col <= s).all()  # collisions may merge buckets
+    assert (nnz_per_col >= 1).all()
+
+
+def test_hybrid_reduces_to_extremes():
+    """m'=m -> plain sampling row-set; m'=n with gaussian inner ~ gaussian sketch."""
+    n, d, m = 64, 6, 16
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    spec = sk.SketchSpec("hybrid", m, m_prime=m, inner="gaussian")
+    SA = sk.apply_sketch(spec, jax.random.PRNGKey(1), A)
+    assert SA.shape == (m, d)
+    spec_full = sk.SketchSpec("hybrid", m, m_prime=n, inner="gaussian")
+    SA2 = sk.apply_sketch(spec_full, jax.random.PRNGKey(1), A)
+    assert SA2.shape == (m, d)

@@ -1,0 +1,125 @@
+"""Monte-Carlo validation of the paper's exact formulas and bounds (fast sizes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketches as sk, solve, theory
+from repro.utils import prng
+
+
+@pytest.fixture(scope="module")
+def problem():
+    n, d = 1024, 12
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, d))
+    b = A @ jax.random.normal(jax.random.PRNGKey(1), (d,)) + jax.random.normal(
+        jax.random.PRNGKey(2), (n,)
+    )
+    x_star = solve.lstsq(A, b)
+    f_star = float(solve.residual_cost(A, b, x_star))
+    return A, b, x_star, f_star
+
+
+def _costs(A, b, spec, trials, key):
+    def one(w):
+        xk = solve.sketch_and_solve(spec, prng.worker_key(key, w), A, b)
+        return solve.residual_cost(A, b, xk), xk
+
+    return jax.lax.map(one, jnp.arange(trials), batch_size=64)
+
+
+def test_lemma1_exact_error(problem):
+    A, b, x_star, f_star = problem
+    d = A.shape[1]
+    m = 8 * d
+    costs, _ = _costs(A, b, sk.SketchSpec("gaussian", m), 400, jax.random.PRNGKey(3))
+    emp = float(jnp.mean(costs)) / f_star - 1.0
+    exact = theory.gaussian_single_error(m, d)
+    assert abs(emp - exact) / exact < 0.25, (emp, exact)
+
+
+def test_theorem1_q_scaling(problem):
+    """Averaged error must fall as 1/q (unbiased Gaussian sketch)."""
+    A, b, x_star, f_star = problem
+    d = A.shape[1]
+    m = 8 * d
+    spec = sk.SketchSpec("gaussian", m)
+    key = jax.random.PRNGKey(4)
+    _, xs = _costs(A, b, spec, 256, key)
+    errs = {}
+    for q in (1, 4, 16):
+        groups = xs[: (256 // q) * q].reshape(256 // q, q, d)
+        xbars = jnp.mean(groups, axis=1)
+        costs = jax.vmap(lambda x: solve.residual_cost(A, b, x))(xbars)
+        errs[q] = float(jnp.mean(costs)) / f_star - 1.0
+        exact = theory.gaussian_averaged_error(m, d, q)
+        assert abs(errs[q] - exact) / exact < 0.4, (q, errs[q], exact)
+    assert errs[16] < errs[4] < errs[1]
+
+
+def test_lemma2_decomposition(problem):
+    """variance/q + bias²(q-1)/q must reproduce the measured averaged error for a
+    *biased* sketch (uniform sampling)."""
+    A, b, x_star, f_star = problem
+    d = A.shape[1]
+    m = 6 * d
+    spec = sk.SketchSpec("uniform", m, replacement=True)
+    key = jax.random.PRNGKey(5)
+    _, xs = _costs(A, b, spec, 512, key)
+    Axs = jax.vmap(lambda x: A @ x)(xs)
+    var_term, bias_sq = theory.empirical_bias_variance(Axs, A @ x_star)
+    q = 8
+    pred = theory.lemma2_error(float(var_term), float(bias_sq), q)
+    groups = xs[: (512 // q) * q].reshape(512 // q, q, d)
+    costs = jax.vmap(lambda g: solve.residual_cost(A, b, jnp.mean(g, axis=0)))(groups)
+    measured = float(jnp.mean(costs)) - f_star
+    assert abs(measured - pred) / pred < 0.35, (measured, pred)
+
+
+def test_lemma7_right_sketch():
+    n, d = 16, 256
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    x_star = solve.least_norm(A, b)
+    f_star = float(jnp.vdot(x_star, x_star))
+    m = 6 * n
+    spec = sk.SketchSpec("gaussian", m)
+
+    def one(w):
+        xk = solve.sketch_least_norm(spec, prng.worker_key(jax.random.PRNGKey(2), w), A, b)
+        e = xk - x_star
+        return jnp.vdot(e, e)
+
+    errs = jax.lax.map(one, jnp.arange(300), batch_size=50)
+    emp = float(jnp.mean(errs)) / f_star
+    exact = theory.gaussian_least_norm_error(m, n, d)
+    assert abs(emp - exact) / exact < 0.3, (emp, exact)
+
+
+def test_right_sketch_average_improves():
+    n, d = 16, 128
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    x_star = solve.least_norm(A, b)
+    spec = sk.SketchSpec("gaussian", 4 * n)
+    xs = jax.vmap(
+        lambda w: solve.sketch_least_norm(spec, prng.worker_key(jax.random.PRNGKey(2), w), A, b)
+    )(jnp.arange(32))
+    e1 = float(jnp.linalg.norm(xs[0] - x_star))
+    e32 = float(jnp.linalg.norm(jnp.mean(xs, axis=0) - x_star))
+    assert e32 < e1 / 2
+
+
+def test_workers_for_error():
+    assert theory.workers_for_error(m=200, d=20, eps=0.01) >= 10
+    assert theory.workers_for_error(m=200, d=20, eps=1.0) >= 1
+
+
+def test_success_probability_bounds():
+    p = theory.theorem1_success_probability(m=400, d=20, q=10, eps=0.5)
+    assert 0.0 <= p <= 1.0
+    # more workers with same per-worker quality only multiplies the (1-e^-cm)^q term
+    p_more_m = theory.theorem1_success_probability(m=800, d=20, q=10, eps=0.5)
+    assert p_more_m >= p
