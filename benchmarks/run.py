@@ -23,6 +23,7 @@ from benchmarks import (
     kernel_bench,
     privacy_bound,
     sketch_dp_ablation,
+    sketch_ops_bench,
     thm1_validation,
 )
 
@@ -38,6 +39,7 @@ MODULES = {
     "gradcomp": gradcomp_bench,
     "sketch_dp": sketch_dp_ablation,
     "kernels": kernel_bench,
+    "sketch_ops": sketch_ops_bench,
 }
 
 
@@ -48,6 +50,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     keys = [k.strip() for k in args.only.split(",") if k.strip()] or list(MODULES)
+    unknown = [k for k in keys if k not in MODULES]
+    if unknown:
+        print(f"unknown benchmark keys {unknown}; available: {sorted(MODULES)}")
+        return 2
     failures = []
     for k in keys:
         mod = MODULES[k]

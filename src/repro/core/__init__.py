@@ -1,5 +1,12 @@
 """Core library: the paper's contribution (distributed sketching for regression)."""
 from repro.core.sketches import SketchSpec, apply_sketch, sketch_data, materialize
+from repro.core.operators import (
+    SketchOp,
+    make_operator,
+    apply_batched,
+    apply_blocked,
+    sketch_data_batched,
+)
 from repro.core.solve import (
     lstsq,
     least_norm,
@@ -9,4 +16,4 @@ from repro.core.solve import (
     relative_error,
 )
 from repro.core.averaging import masked_average, psum_average, StreamingAverage
-from repro.core import theory, privacy, distributed, ihs, gradcomp
+from repro.core import theory, privacy, distributed, ihs, gradcomp, operators

@@ -15,6 +15,20 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.utils import compat
+
+
+def worker_index(axis_names) -> jax.Array:
+    """Linear worker index across (possibly multiple) mesh axes, inside shard_map.
+
+    The one definition shared by the solver, gradient-compression, and sketch-DP
+    paths — their worker keys must agree, so their index arithmetic must too.
+    """
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * compat.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
 
 def masked_average(xs: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
     """Mean over axis 0 of xs (q, ...), counting only mask==1 rows.

@@ -26,18 +26,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from repro.core import averaging, sketches as sk, solve
+from repro.core import averaging, operators, sketches as sk, solve
 from repro.utils import prng
+from repro.utils.compat import shard_map
 
 
-def _worker_index(axis_names) -> jax.Array:
-    """Linear worker index across (possibly multiple) mesh axes, inside shard_map."""
-    idx = jnp.int32(0)
-    for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    return idx
+_worker_index = averaging.worker_index
 
 
 def distributed_sketch_solve(
@@ -84,6 +79,54 @@ def distributed_sketch_solve(
 
     fn = shard_map(worker, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return fn(key, A, b, straggler_mask)
+
+
+def distributed_sketch_solve_master(
+    mesh: Mesh,
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    axis_names: tuple = ("data",),
+    reg: float = 0.0,
+    method: str = "qr",
+    straggler_mask: Optional[jax.Array] = None,
+    round_id: int = 0,
+):
+    """Algorithm 1 in *master-sketch* mode (the paper's privacy deployment: only the
+    master touches raw rows; workers see (S_kA, S_kb)).
+
+    All q sketches are computed in one batched pass over A
+    (``operators.apply_batched``) instead of q per-worker re-reads, then sharded so
+    each worker solves its own m×d problem and joins the masked psum average.
+    Worker keys match :func:`distributed_sketch_solve`, so the two modes return the
+    same x̄ for the same inputs.
+    """
+    q = 1
+    for name in axis_names:
+        q *= mesh.shape[name]
+    if straggler_mask is None:
+        straggler_mask = jnp.ones((q,), jnp.float32)
+
+    keys = prng.worker_keys(key, q, round_id)
+    SA, Sb = operators.sketch_data_batched(spec, keys, A, b)  # (q, m, d), (q, m[, k])
+
+    def worker(SA_blk, Sb_blk, mask_all):
+        widx = _worker_index(axis_names)
+        xk = solve.lstsq(SA_blk[0], Sb_blk[0], reg=reg, method=method)
+        mask = mask_all[widx]
+        num = jax.lax.psum(xk * mask, axis_names)
+        den = jax.lax.psum(mask, axis_names)
+        return num / jnp.maximum(den, 1.0)
+
+    fn = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis_names), P(axis_names), P()),
+        out_specs=P(),
+    )
+    return fn(SA, Sb, straggler_mask)
 
 
 def distributed_sketch_least_norm(

@@ -30,6 +30,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import averaging, operators
+from repro.core.sketches import SketchSpec
 from repro.utils import tree as tu
 
 
@@ -42,51 +44,31 @@ class GradCompressionConfig:
     min_size: int = 4096        # leaves smaller than this are sent uncompressed
 
 
-def _countsketch_project(key: jax.Array, g: jax.Array, m: int):
-    D = g.shape[0]
-    kb, ks = jax.random.split(key)
-    buckets = jax.random.randint(kb, (D,), 0, m)
-    signs = jax.random.rademacher(ks, (D,), dtype=g.dtype)
-    sg = jax.ops.segment_sum(g * signs, buckets, num_segments=m)
-    return sg, (buckets, signs)
-
-
-def _countsketch_backproject(sg: jax.Array, aux) -> jax.Array:
-    buckets, signs = aux
-    return jnp.take(sg, buckets, axis=0) * signs
-
-
-def _gaussian_project(key: jax.Array, g: jax.Array, m: int):
-    D = g.shape[0]
-    S = jax.random.normal(key, (m, D), dtype=g.dtype) * (1.0 / math.sqrt(m))
-    return S @ g, S
-
-
-def _gaussian_backproject(sg: jax.Array, S) -> jax.Array:
-    return S.T @ sg
+def _sketch_spec(cfg: GradCompressionConfig, m: int) -> SketchSpec:
+    """The compressor as a SketchOp spec: CountSketch is SJLT with s = 1."""
+    if cfg.kind == "countsketch":
+        return SketchSpec("sjlt", m, s=1)
+    if cfg.kind == "gaussian":
+        return SketchSpec("gaussian", m)
+    raise ValueError(cfg.kind)
 
 
 def compress(cfg: GradCompressionConfig, key: jax.Array, grads):
-    """Project the gradient pytree into sketch space. Returns (payload, ctx)."""
+    """Project the gradient pytree into sketch space. Returns (payload, ctx).
+
+    The projection/backprojection pair is a ``SketchOp`` and its adjoint
+    (E[SᵀS] = I ⇒ unbiased), from the same registry the solvers dispatch through.
+    """
     vec, vz = tu.tree_flatten_to_vector(grads)
     D = vec.shape[0]
     m = max(1, int(math.ceil(cfg.ratio * D)))
-    if cfg.kind == "countsketch":
-        sg, aux = _countsketch_project(key, vec, m)
-    elif cfg.kind == "gaussian":
-        sg, aux = _gaussian_project(key, vec, m)
-    else:
-        raise ValueError(cfg.kind)
-    return sg, (aux, vz)
+    op = operators.make_operator(_sketch_spec(cfg, m), key, D)
+    return op.apply(vec), (op, vz)
 
 
 def decompress(cfg: GradCompressionConfig, payload, ctx):
-    aux, vz = ctx
-    if cfg.kind == "countsketch":
-        vec = _countsketch_backproject(payload, aux)
-    else:
-        vec = _gaussian_backproject(payload, aux)
-    return vz.unflatten(vec)
+    op, vz = ctx
+    return vz.unflatten(op.adjoint(payload))
 
 
 def compressed_psum_mean(cfg: GradCompressionConfig, key: jax.Array, grads, axis_names):
@@ -99,10 +81,7 @@ def compressed_psum_mean(cfg: GradCompressionConfig, key: jax.Array, grads, axis
         summed = jax.tree_util.tree_map(lambda g: jax.lax.pmean(g, axis_names), grads)
         return summed
     if cfg.mode == "fresh_sketch":
-        widx = jnp.int32(0)
-        for name in axis_names:
-            widx = widx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-        key = jax.random.fold_in(key, widx)
+        key = jax.random.fold_in(key, averaging.worker_index(axis_names))
         payload, ctx = compress(cfg, key, grads)
         local = decompress(cfg, payload, ctx)
         return jax.tree_util.tree_map(lambda g: jax.lax.pmean(g, axis_names), local)

@@ -8,14 +8,35 @@ IHS refines x_t with a fresh sketched Hessian each iteration,
 converging geometrically but requiring synchronous rounds (each iteration needs the
 previous iterate — no straggler resilience), whereas Algorithm 1's averaging is fully
 asynchronous. Benchmarks put both on the same plots.
+
+The sketches S_t are independent of the iterates, so all ``iters`` sketched Hessian
+factors ``S_t A`` are computed up front by ``operators.apply_batched`` — one read of
+A instead of one per iteration — and the refinement loop is a ``lax.scan`` over them.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sketches as sk
+from repro.core import operators, sketches as sk
 from repro.utils import prng
+
+
+def _ihs_scan(spec, key, A, b, iters: int, reg: float):
+    d = A.shape[1]
+    keys = prng.worker_keys(key, iters)
+    SAs = operators.apply_batched(spec, keys, A)  # (iters, m, d): one pass over A
+
+    def step(x, SA):
+        H = SA.T @ SA + reg * jnp.eye(d, dtype=A.dtype)
+        g = A.T @ (b - A @ x)
+        L = jnp.linalg.cholesky(H)
+        y = jax.scipy.linalg.solve_triangular(L, g, lower=True)
+        x = x + jax.scipy.linalg.solve_triangular(L.T, y, lower=False)
+        return x, x
+
+    x0 = jnp.zeros((d,), A.dtype)
+    return jax.lax.scan(step, x0, SAs)
 
 
 def ihs_solve(
@@ -28,31 +49,11 @@ def ihs_solve(
     reg: float = 0.0,
 ) -> jax.Array:
     """Run ``iters`` IHS iterations. spec.m should be >= ~2d for geometric decay."""
-    d = A.shape[1]
-    x = jnp.zeros((d,), A.dtype)
-    for t in range(iters):
-        kt = prng.worker_key(key, t)
-        SA = sk.apply_sketch(spec, kt, A)
-        H = SA.T @ SA + reg * jnp.eye(d, dtype=A.dtype)
-        g = A.T @ (b - A @ x)
-        L = jnp.linalg.cholesky(H)
-        y = jax.scipy.linalg.solve_triangular(L, g, lower=True)
-        x = x + jax.scipy.linalg.solve_triangular(L.T, y, lower=False)
+    x, _ = _ihs_scan(spec, key, A, b, iters, reg)
     return x
 
 
 def ihs_trace(spec, key, A, b, *, iters: int = 10, reg: float = 0.0):
     """Like ihs_solve but returns the iterate after every step (for benchmarks)."""
-    d = A.shape[1]
-    x = jnp.zeros((d,), A.dtype)
-    out = []
-    for t in range(iters):
-        kt = prng.worker_key(key, t)
-        SA = sk.apply_sketch(spec, kt, A)
-        H = SA.T @ SA + reg * jnp.eye(d, dtype=A.dtype)
-        g = A.T @ (b - A @ x)
-        L = jnp.linalg.cholesky(H)
-        y = jax.scipy.linalg.solve_triangular(L, g, lower=True)
-        x = x + jax.scipy.linalg.solve_triangular(L.T, y, lower=False)
-        out.append(x)
-    return jnp.stack(out)
+    _, trace = _ihs_scan(spec, key, A, b, iters, reg)
+    return trace

@@ -1,0 +1,606 @@
+"""`SketchOp`: the paper's sketch family as composable linear operators.
+
+Every sketch ``S ∈ R^{m×n}`` in the repo used to exist only as a *function*
+``(key, A) -> S @ A`` dispatched through a string-keyed if-chain. This module turns
+each kind into a frozen linear-operator object built once from ``(SketchSpec, key, n)``
+and exposing the full operator calculus the pipeline needs:
+
+  * ``apply(A)``                 — ``S @ A`` (fast path per kind; Pallas kernel when
+                                   ``spec.use_kernel`` and one exists),
+  * ``adjoint(Y)``               — ``Sᵀ @ Y`` without ever materializing S (scatter for
+                                   sampling sketches, FWHT for SRHT, gather for SJLT,
+                                   streamed counter-RNG tiles for Gaussian),
+  * ``apply_blocked(A, block_rows=...)`` — a ``lax.scan`` over row tiles of A, so ``n``
+                                   can exceed device memory: each sketch is a sum /
+                                   gather over row blocks and tile ``(i, j)`` of the
+                                   random S is a pure function of ``(key, i, j)``
+                                   (counter RNG, shared with ``repro.kernels``),
+  * ``materialize()``            — explicit S for tests / tiny problems.
+
+A registry (``@register(kind)`` → ``make_operator``) replaces every if-chain dispatch,
+including the ``use_kernel`` routing into the Pallas kernels. Multi-worker callers use
+
+  * :func:`apply_batched` — vmap ``q`` independent sketches over a *single* read of A
+    (Algorithm 1's master-sketch mode, IHS's per-iteration sketches, head fitting),
+  * :func:`sketch_data_batched` — the batched ``(S_k A, S_k b)`` pairs of Algorithm 1.
+
+Randomness contract
+-------------------
+All per-element randomness is counter-based (threefry2x32 from ``repro.kernels.common``):
+entry/row parameters are pure functions of ``(key, global index)``. This is what makes
+``apply_blocked`` produce bit-comparable results for *any* block size, and what lets
+the Pallas Gaussian/SJLT kernels draw the *same* S as the pure-jnp paths. Only the
+O(m) row-sampling draws (uniform/leverage/SRHT row picks, hybrid's row subset) use
+ordinary ``jax.random`` calls — they are tiny and never need streaming.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketches as sk
+from repro.kernels import common as kcommon
+
+# Default row-tile for blocked/streamed application. 4096 rows × 512 cols of f32 is
+# 8 MiB — comfortably inside a v5e core's VMEM budget alongside the (m, block) S tile.
+DEFAULT_BLOCK_ROWS = 4096
+
+
+# ----------------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(kind: str) -> Callable[[type], type]:
+    """Class decorator: make ``kind`` constructible through :func:`make_operator`."""
+
+    def deco(cls: type) -> type:
+        _REGISTRY[kind] = cls
+        return cls
+
+    return deco
+
+
+def registered_kinds() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_operator(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    n: int,
+    *,
+    scores: Optional[jax.Array] = None,
+) -> "SketchOp":
+    """Build the frozen ``S ∈ R^{m×n}`` described by ``spec`` from ``key``.
+
+    ``scores``: leverage scores (required for ``kind="leverage"``, ignored otherwise);
+    data-dependent sketches must be given their data statistics explicitly so the
+    resulting object is a *fixed* linear operator.
+    """
+    try:
+        cls = _REGISTRY[spec.kind]
+    except KeyError:
+        raise ValueError(
+            f"no SketchOp registered for kind {spec.kind!r}; known: {registered_kinds()}"
+        ) from None
+    return cls.build(spec, key, n, scores=scores)
+
+
+# --------------------------------------------------------------------- shape utils
+
+
+def _to_2d(X: jax.Array, rows: int):
+    """View (rows, ...) as (rows, k); returns the 2-D view and the trailing shape."""
+    if X.shape[0] != rows:
+        raise ValueError(f"operator expects leading dim {rows}, got shape {X.shape}")
+    return X.reshape(rows, -1), X.shape[1:]
+
+
+def _from_2d(Y2: jax.Array, batch: tuple) -> jax.Array:
+    return Y2.reshape((Y2.shape[0],) + batch)
+
+
+def _scan_row_blocks(A2: jax.Array, n: int, block_rows: int, init: jax.Array, reducer):
+    """Shared blocked-streaming scaffold: ``lax.scan`` of ``reducer(acc, j0, A_blk)``
+    over zero-padded f32 row tiles of A2 (2-D). Zero rows beyond n contribute
+    nothing to any registered reducer (matmul against zeros / gather of zeros /
+    scatter of zeros), so no masking is needed."""
+    bs = max(1, min(block_rows, n))
+    nb = -(-n // bs)
+    if nb * bs != n:
+        A2 = jnp.pad(A2, ((0, nb * bs - n), (0, 0)))
+    blocks = A2.reshape(nb, bs, A2.shape[1]).astype(jnp.float32)
+    j0s = jnp.arange(nb, dtype=jnp.int32) * bs
+
+    def body(acc, xs):
+        j0, Ab = xs
+        return reducer(acc, j0, Ab), None
+
+    acc, _ = jax.lax.scan(body, init, (j0s, blocks))
+    return acc
+
+
+def _gather_rows_reducer(rows: jax.Array):
+    """Reducer accumulating ``A[rows]`` from row blocks: O(len(rows)·k) per block
+    (a mask-and-gather), not a dense one-hot matmul."""
+
+    def reducer(acc, j0, Ab):
+        local = rows - j0
+        in_blk = (local >= 0) & (local < Ab.shape[0])
+        idx = jnp.clip(local, 0, Ab.shape[0] - 1)
+        return acc + jnp.where(in_blk[:, None], jnp.take(Ab, idx, axis=0), 0.0)
+
+    return reducer
+
+
+# -------------------------------------------------------------------------- base
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchOp:
+    """Frozen linear operator S ∈ R^{m×n} (base class).
+
+    Subclasses either implement :meth:`columns` — an arbitrary column block of S,
+    valid for traced start offsets — and inherit generic blocked apply/adjoint, or
+    override the generic methods with cheaper structure-aware code (SJLT, hybrid).
+    """
+
+    spec: sk.SketchSpec
+    key: jax.Array
+    n: int
+
+    @property
+    def m(self) -> int:
+        return self.spec.m
+
+    @property
+    def shape(self) -> tuple:
+        return (self.m, self.n)
+
+    # -- construction ------------------------------------------------------------
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None) -> "SketchOp":
+        raise NotImplementedError
+
+    # -- required tile primitive --------------------------------------------------
+
+    def columns(self, j0, block: int) -> jax.Array:
+        """``S[:, j0 : j0+block]`` as an (m, block) tile. ``j0`` may be traced.
+
+        Column indices ≥ n are permitted (blocked application pads A's rows with
+        zeros, so out-of-range columns multiply zeros and contribute nothing); the
+        values there only need to be finite.
+        """
+        raise NotImplementedError(f"{type(self).__name__} does not expose S tiles")
+
+    # -- operator calculus --------------------------------------------------------
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        """``S @ A`` for A of shape (n, ...). Default: one full-width tile."""
+        A2, batch = _to_2d(A, self.n)
+        out = (self.columns(0, self.n) @ A2.astype(jnp.float32)).astype(A.dtype)
+        return _from_2d(out, batch)
+
+    def apply_blocked(
+        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
+    ) -> jax.Array:
+        """``S @ A`` streamed as a ``lax.scan`` over row tiles of A.
+
+        Peak live memory is O(block_rows · k + m · k) instead of O(n · k): the
+        sketch never needs all of A resident. Matches :meth:`apply` to float
+        tolerance for any ``block_rows`` (including ones that don't divide n).
+        """
+        A2, batch = _to_2d(A, self.n)
+        acc = _scan_row_blocks(
+            A2,
+            self.n,
+            block_rows,
+            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
+            lambda acc, j0, Ab: acc + self.columns(j0, Ab.shape[0]) @ Ab,
+        )
+        return _from_2d(acc.astype(A.dtype), batch)
+
+    def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+        """``Sᵀ @ Y`` for Y of shape (m, ...), streamed over column tiles of S."""
+        Y2, batch = _to_2d(Y, self.m)
+        Yf = Y2.astype(jnp.float32)
+        bs = max(1, min(block_rows, self.n))
+        nb = -(-self.n // bs)
+        j0s = jnp.arange(nb, dtype=jnp.int32) * bs
+
+        def body(_, j0):
+            return None, self.columns(j0, bs).T @ Yf  # (bs, k)
+
+        _, outs = jax.lax.scan(body, None, j0s)
+        out = outs.reshape(nb * bs, Yf.shape[1])[: self.n]
+        return _from_2d(out.astype(Y.dtype), batch)
+
+    def materialize(self, dtype=jnp.float32) -> jax.Array:
+        """Explicit S ∈ R^{m×n} (tests / small problems only)."""
+        return self.apply(jnp.eye(self.n, dtype=dtype))
+
+
+# ----------------------------------------------------------------------- gaussian
+
+
+@register("gaussian")
+@dataclasses.dataclass(frozen=True)
+class GaussianOp(SketchOp):
+    """i.i.d. N(0, 1/m) entries from the counter stream: S[i, j] = f(key, i, j).
+
+    The exact same stream the RNG-fused Pallas kernel generates tile-by-tile
+    (``repro.kernels.gaussian``), so the kernel path, the jnp path, blocked
+    streaming, and the adjoint all agree on S.
+    """
+
+    k0: jax.Array = None
+    k1: jax.Array = None
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None):
+        k0, k1 = kcommon.key_to_words(key)
+        return cls(spec=spec, key=key, n=n, k0=k0, k1=k1)
+
+    def columns(self, j0, block: int) -> jax.Array:
+        rows = jax.lax.broadcasted_iota(jnp.uint32, (self.m, block), 0)
+        cols = jnp.uint32(j0) + jax.lax.broadcasted_iota(jnp.uint32, (self.m, block), 1)
+        z = kcommon.counter_normal(self.k0, self.k1, rows, cols)
+        return z * jnp.float32(1.0 / math.sqrt(self.m))
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        if self.spec.use_kernel:
+            from repro.kernels.gaussian import ops as gops
+
+            A2, batch = _to_2d(A, self.n)
+            return _from_2d(gops.gaussian_sketch(self.key, A2, self.m), batch)
+        return super().apply(A)
+
+
+# -------------------------------------------------------------------------- srht
+
+
+@register("srht")
+@dataclasses.dataclass(frozen=True)
+class SRHTOp(SketchOp):
+    """Randomized Hadamard (ROS): S = (1/√m) · P · H · D on the 2^⌈log n⌉ padding.
+
+    ``apply`` uses the O(n log n) FWHT (Pallas kernel when requested); ``columns``
+    builds Hadamard tiles H[r, j] = (−1)^popcount(r & j) on the fly, which is what
+    makes blocked/streamed application possible without the full transform.
+    """
+
+    kd0: jax.Array = None  # sign-counter key words (D diagonal)
+    kd1: jax.Array = None
+    rows: jax.Array = None  # (m,) sampled Hadamard rows, with replacement
+    n_pad: int = 0
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None):
+        n_pad = sk.next_pow2(n)
+        kd, kp = jax.random.split(key)
+        kd0, kd1 = kcommon.key_to_words(kd)
+        rows = jax.random.randint(kp, (spec.m,), 0, n_pad)
+        return cls(spec=spec, key=key, n=n, kd0=kd0, kd1=kd1, rows=rows, n_pad=n_pad)
+
+    def _signs(self, j: jax.Array) -> jax.Array:
+        """Rademacher diagonal D at (possibly traced) coordinate(s) j."""
+        return kcommon.counter_rademacher(self.kd0, self.kd1, j.astype(jnp.uint32), jnp.uint32(0))
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        A2, batch = _to_2d(A, self.n)
+        DA = A2.astype(jnp.float32) * self._signs(jnp.arange(self.n))[:, None]
+        if self.n_pad != self.n:
+            DA = jnp.pad(DA, ((0, self.n_pad - self.n), (0, 0)))
+        if self.spec.use_kernel:
+            from repro.kernels.fwht import ops as fops
+
+            HDA = fops.fwht(DA)
+        else:
+            HDA = sk._fwht(DA)
+        out = jnp.take(HDA, self.rows, axis=0) * jnp.float32(1.0 / math.sqrt(self.m))
+        return _from_2d(out.astype(A.dtype), batch)
+
+    def columns(self, j0, block: int) -> jax.Array:
+        j = jnp.uint32(j0) + jnp.arange(block, dtype=jnp.uint32)
+        # Sylvester closed form: H[r, j] = (−1)^popcount(r & j) — no transform needed.
+        parity = jax.lax.population_count(self.rows.astype(jnp.uint32)[:, None] & j[None, :])
+        h = (1 - 2 * (parity & jnp.uint32(1)).astype(jnp.int32)).astype(jnp.float32)
+        return h * self._signs(j)[None, :] * jnp.float32(1.0 / math.sqrt(self.m))
+
+    def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+        Y2, batch = _to_2d(Y, self.m)
+        # Sᵀ = (1/√m) · D · Hᵀ · Pᵀ with H symmetric; Pᵀ is scatter-add (P repeats rows).
+        Z = jnp.zeros((self.n_pad, Y2.shape[1]), jnp.float32).at[self.rows].add(
+            Y2.astype(jnp.float32)
+        )
+        HZ = sk._fwht(Z)[: self.n]
+        out = HZ * self._signs(jnp.arange(self.n))[:, None] * jnp.float32(1.0 / math.sqrt(self.m))
+        return _from_2d(out.astype(Y.dtype), batch)
+
+
+# ------------------------------------------------------------------ row sampling
+
+
+@register("uniform")
+@dataclasses.dataclass(frozen=True)
+class UniformOp(SketchOp):
+    """Uniform row sampling scaled by √(n/m) so E[SᵀS] = I."""
+
+    rows: jax.Array = None  # (m,)
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None):
+        if spec.replacement:
+            rows = jax.random.randint(key, (spec.m,), 0, n)
+        else:
+            # Gumbel top-k == sampling without replacement, jit-friendly.
+            g = jax.random.gumbel(key, (n,))
+            rows = jax.lax.top_k(g, spec.m)[1]
+        return cls(spec=spec, key=key, n=n, rows=rows)
+
+    @property
+    def _scale(self) -> float:
+        return math.sqrt(self.n / self.m)
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        return jnp.take(A, self.rows, axis=0) * jnp.asarray(self._scale, A.dtype)
+
+    def columns(self, j0, block: int) -> jax.Array:
+        j = jnp.int32(j0) + jnp.arange(block, dtype=jnp.int32)
+        onehot = (self.rows[:, None] == j[None, :]).astype(jnp.float32)
+        return onehot * jnp.float32(self._scale)
+
+    def apply_blocked(
+        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
+    ) -> jax.Array:
+        A2, batch = _to_2d(A, self.n)
+        acc = _scan_row_blocks(
+            A2,
+            self.n,
+            block_rows,
+            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
+            _gather_rows_reducer(self.rows),
+        )
+        return _from_2d((acc * jnp.float32(self._scale)).astype(A.dtype), batch)
+
+    def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+        Y2, batch = _to_2d(Y, self.m)
+        out = jnp.zeros((self.n, Y2.shape[1]), Y2.dtype).at[self.rows].add(Y2)
+        return _from_2d(out * jnp.asarray(self._scale, Y.dtype), batch)
+
+
+@register("leverage")
+@dataclasses.dataclass(frozen=True)
+class LeverageOp(SketchOp):
+    """Leverage-score sampling: P[row j] ∝ ℓ_j, kept row scaled by 1/√(m·p_j)."""
+
+    rows: jax.Array = None  # (m,)
+    scales: jax.Array = None  # (m,)
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None):
+        if scores is None:
+            raise ValueError(
+                "leverage sketches are data-dependent: pass scores= to make_operator "
+                "(e.g. sketches.leverage_scores(A)) so the operator is fixed"
+            )
+        p = scores / jnp.sum(scores)
+        rows = jax.random.categorical(key, jnp.log(p + 1e-30), shape=(spec.m,))
+        scales = 1.0 / jnp.sqrt(spec.m * jnp.take(p, rows))
+        return cls(spec=spec, key=key, n=n, rows=rows, scales=scales)
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        scl = self.scales.astype(A.dtype)
+        return jnp.take(A, self.rows, axis=0) * scl.reshape((self.m,) + (1,) * (A.ndim - 1))
+
+    def columns(self, j0, block: int) -> jax.Array:
+        j = jnp.int32(j0) + jnp.arange(block, dtype=jnp.int32)
+        onehot = (self.rows[:, None] == j[None, :]).astype(jnp.float32)
+        return onehot * self.scales.astype(jnp.float32)[:, None]
+
+    def apply_blocked(
+        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
+    ) -> jax.Array:
+        A2, batch = _to_2d(A, self.n)
+        acc = _scan_row_blocks(
+            A2,
+            self.n,
+            block_rows,
+            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
+            _gather_rows_reducer(self.rows),
+        )
+        return _from_2d((acc * self.scales.astype(jnp.float32)[:, None]).astype(A.dtype), batch)
+
+    def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+        Y2, batch = _to_2d(Y, self.m)
+        contrib = Y2 * self.scales.astype(Y2.dtype)[:, None]
+        out = jnp.zeros((self.n, Y2.shape[1]), Y2.dtype).at[self.rows].add(contrib)
+        return _from_2d(out, batch)
+
+
+# -------------------------------------------------------------------------- sjlt
+
+
+@register("sjlt")
+@dataclasses.dataclass(frozen=True)
+class SJLTOp(SketchOp):
+    """Sparse JL: s nonzeros (±1/√s) per input coordinate, counter-derived per row.
+
+    Row parameters come from :func:`repro.kernels.common.sjlt_counter_params`, the
+    same draw the Pallas kernel consumes — kernel and jnp paths share S exactly.
+    """
+
+    k0: jax.Array = None
+    k1: jax.Array = None
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None):
+        k0, k1 = kcommon.key_to_words(key)
+        return cls(spec=spec, key=key, n=n, k0=k0, k1=k1)
+
+    def _params(self, row_idx: jax.Array):
+        return kcommon.sjlt_counter_params(self.k0, self.k1, row_idx, self.spec.s, self.m)
+
+    def _segment_apply(self, A2: jax.Array, row_idx: jax.Array) -> jax.Array:
+        buckets, signs = self._params(row_idx)
+        r, s = buckets.shape
+        vals = (signs[..., None] * A2[:, None, :]).reshape(r * s, A2.shape[1])
+        return jax.ops.segment_sum(vals, buckets.reshape(-1), num_segments=self.m)
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        A2, batch = _to_2d(A, self.n)
+        if self.spec.use_kernel:
+            from repro.kernels.sjlt import ops as sops
+
+            buckets, signs = self._params(jnp.arange(self.n))
+            out = sops.sjlt_apply(A2, buckets, signs, self.m)
+        else:
+            out = self._segment_apply(A2.astype(jnp.float32), jnp.arange(self.n)).astype(A.dtype)
+        return _from_2d(out, batch)
+
+    def apply_blocked(
+        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
+    ) -> jax.Array:
+        A2, batch = _to_2d(A, self.n)
+        acc = _scan_row_blocks(
+            A2,
+            self.n,
+            block_rows,
+            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
+            lambda acc, j0, Ab: acc
+            + self._segment_apply(Ab, j0 + jnp.arange(Ab.shape[0], dtype=jnp.int32)),
+        )
+        return _from_2d(acc.astype(A.dtype), batch)
+
+    def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+        Y2, batch = _to_2d(Y, self.m)
+        buckets, signs = self._params(jnp.arange(self.n))  # (n, s)
+        gathered = jnp.take(Y2.astype(jnp.float32), buckets, axis=0)  # (n, s, k)
+        out = jnp.sum(gathered * signs[..., None], axis=1)
+        return _from_2d(out.astype(Y.dtype), batch)
+
+
+# ------------------------------------------------------------------------ hybrid
+
+
+@register("hybrid")
+@dataclasses.dataclass(frozen=True)
+class HybridOp(SketchOp):
+    """Paper §IV-D: uniform-sample m′ rows without replacement (what a worker can
+    afford to *read*), then an inner sketch m′ → m (what it can afford to *compute*).
+
+    S = S_inner · U with U the scaled row-subset selector; the operator calculus
+    composes: apply = inner∘gather, adjoint = scatter∘innerᵀ."""
+
+    rows: jax.Array = None  # (m_prime,)
+    inner: SketchOp = None
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None):
+        k1, k2 = jax.random.split(key)
+        g = jax.random.gumbel(k1, (n,))
+        rows = jax.lax.top_k(g, spec.m_prime)[1]
+        inner_spec = sk.SketchSpec(spec.inner, spec.m, s=spec.s, use_kernel=spec.use_kernel)
+        inner = make_operator(inner_spec, k2, spec.m_prime)
+        return cls(spec=spec, key=key, n=n, rows=rows, inner=inner)
+
+    @property
+    def _scale(self) -> float:
+        return math.sqrt(self.n / self.spec.m_prime)
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        sampled = jnp.take(A, self.rows, axis=0) * jnp.asarray(self._scale, A.dtype)
+        return self.inner.apply(sampled)
+
+    def apply_blocked(
+        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
+    ) -> jax.Array:
+        A2, batch = _to_2d(A, self.n)
+        # The m′×k intermediate is exactly the "what a worker reads" budget — it is
+        # the one thing hybrid sketching keeps resident while streaming over n.
+        sampled = _scan_row_blocks(
+            A2,
+            self.n,
+            block_rows,
+            jnp.zeros((self.spec.m_prime, A2.shape[1]), jnp.float32),
+            _gather_rows_reducer(self.rows),
+        )
+        out = self.inner.apply(sampled * jnp.float32(self._scale))
+        return _from_2d(out.astype(A.dtype), batch)
+
+    def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+        Y2, batch = _to_2d(Y, self.m)
+        z = self.inner.adjoint(Y2)  # (m_prime, k)
+        out = jnp.zeros((self.n, z.shape[1]), z.dtype).at[self.rows].add(z)
+        return _from_2d(out * jnp.asarray(self._scale, Y.dtype), batch)
+
+
+# --------------------------------------------------------- functional entry points
+
+
+def _scores_for(spec: sk.SketchSpec, A: jax.Array, scores) -> Optional[jax.Array]:
+    if spec.kind == "leverage" and scores is None:
+        return sk.leverage_scores(A.reshape(A.shape[0], -1))
+    return scores
+
+
+def apply(spec: sk.SketchSpec, key: jax.Array, A: jax.Array, *, scores=None) -> jax.Array:
+    """``S @ A`` — the registry-dispatched replacement for the old if-chain."""
+    scores = _scores_for(spec, A, scores)
+    return make_operator(spec, key, A.shape[0], scores=scores).apply(A)
+
+
+def apply_blocked(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    scores=None,
+) -> jax.Array:
+    """``S @ A`` streamed over row tiles (out-of-core n)."""
+    scores = _scores_for(spec, A, scores)
+    return make_operator(spec, key, A.shape[0], scores=scores).apply_blocked(
+        A, block_rows=block_rows
+    )
+
+
+def apply_batched(
+    spec: sk.SketchSpec, keys: jax.Array, A: jax.Array, *, scores=None
+) -> jax.Array:
+    """All ``q`` workers' sketches ``(S_k A)_k`` in one pass over A.
+
+    ``keys``: (q,)-batched PRNG keys (e.g. ``prng.worker_keys``). vmapping the
+    per-key operator means A is read once and the q projections batch onto the
+    MXU, instead of q separate passes. Data-dependent statistics (leverage
+    scores) are computed once and shared — each worker still draws its own rows.
+    Returns a (q, m, ...) stack.
+    """
+    scores = _scores_for(spec, A, scores)
+
+    def one(k):
+        return make_operator(spec, k, A.shape[0], scores=scores).apply(A)
+
+    if spec.use_kernel:
+        # pallas_call batching in interpret mode is unreliable; sequential map still
+        # reuses the single resident copy of A.
+        return jax.lax.map(one, keys)
+    return jax.vmap(one)(keys)
+
+
+def sketch_data_batched(
+    spec: sk.SketchSpec, keys: jax.Array, A: jax.Array, b: jax.Array
+) -> tuple:
+    """Batched Algorithm-1 master step: ``(S_k A, S_k b)`` for every worker key,
+    sketching ``[A | b]`` jointly so each worker's pair shares its S."""
+    bm = b if b.ndim == 2 else b[:, None]
+    d = A.shape[1]
+    SAb = apply_batched(spec, keys, jnp.concatenate([A, bm], axis=1))
+    Sb = SAb[..., d:]
+    return SAb[..., :d], (Sb if b.ndim == 2 else Sb[..., 0])

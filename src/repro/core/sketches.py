@@ -1,10 +1,12 @@
 """Randomized sketching operators (the paper's §II-§IV operator family).
 
 Every sketch ``S ∈ R^{m×n}`` here satisfies ``E[SᵀS] = I_n`` — the normalization the
-paper's theory (Lemmas 1-7) assumes. Sketches are applied *functionally*: given a PRNG
-key and a matrix ``A`` of shape ``(n, ...)`` they return ``S @ A`` of shape ``(m, ...)``
-without ever materializing ``S`` (except the Gaussian dense path, which also has an
-RNG-fused Pallas kernel that streams S tiles through VMEM — see ``repro.kernels``).
+paper's theory (Lemmas 1-7) assumes. This module owns the *configuration* surface
+(:class:`SketchSpec`), the leverage-score utilities, and a thin functional API; the
+operators themselves — ``apply``/``adjoint``/``apply_blocked``/``materialize`` plus
+the registry that replaced the old string if-chain — live in
+:mod:`repro.core.operators`. ``spec.use_kernel`` routes through the Pallas TPU
+kernels in ``repro.kernels`` where one exists (interpret-mode on CPU).
 
 Supported kinds (paper section in brackets):
   * ``gaussian``       — i.i.d. N(0, 1/m)                                     [§III]
@@ -17,6 +19,9 @@ Supported kinds (paper section in brackets):
 Design notes
 ------------
 * ``SketchSpec`` is a frozen, hashable config — safe as a static jit argument.
+* Per-element randomness (Gaussian entries, SJLT rows, SRHT signs) is counter-based:
+  a pure function of ``(key, global index)`` shared with the Pallas kernels, so
+  blocked/streamed application reproduces one-shot application for any block size.
 * To sketch ``A`` and ``b`` with the *same* S (as Algorithm 1 requires), concatenate
   ``[A, b[:, None]]`` before sketching: :func:`sketch_data` does this.
 * SRHT pads n to the next power of two internally (zero rows of A contribute nothing;
@@ -26,8 +31,6 @@ Design notes
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 from typing import Optional
 
 import jax
@@ -78,19 +81,14 @@ class SketchSpec:
         """Return ``S @ A`` where A has shape (n, ...)."""
         return apply_sketch(self, key, A)
 
+    def operator(self, key: jax.Array, n: int, *, scores: Optional[jax.Array] = None):
+        """The frozen :class:`repro.core.operators.SketchOp` for this spec."""
+        from repro.core import operators
 
-# --------------------------------------------------------------------------- kinds
+        return operators.make_operator(self, key, n, scores=scores)
 
 
-def gaussian_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
-    """S with i.i.d. N(0, 1/m) entries. E[SᵀS] = I. Unbiased estimator (Lemma 1)."""
-    n = A.shape[0]
-    if use_kernel:
-        from repro.kernels.gaussian import ops as gops
-
-        return gops.gaussian_sketch(key, A, m)
-    S = jax.random.normal(key, (m, n), dtype=A.dtype) * (1.0 / math.sqrt(m))
-    return S @ A
+# ----------------------------------------------------------------- hadamard utils
 
 
 def _fwht(x: jax.Array) -> jax.Array:
@@ -116,47 +114,18 @@ def next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
-def srht_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
-    """Randomized Hadamard (ROS) sketch: S = sqrt(n_pad/m) · P · (H/√n_pad) · D.
-
-    P samples m of n_pad rows uniformly with replacement (matching the paper's
-    Lemma 4 analysis, which assumes with-replacement sampling).
-    """
-    n = A.shape[0]
-    n_pad = next_pow2(n)
-    kd, kp = jax.random.split(key)
-    signs = jax.random.rademacher(kd, (n,), dtype=A.dtype)
-    DA = A * signs.reshape((n,) + (1,) * (A.ndim - 1))
-    if n_pad != n:
-        pad = [(0, n_pad - n)] + [(0, 0)] * (A.ndim - 1)
-        DA = jnp.pad(DA, pad)
-    if use_kernel:
-        from repro.kernels.fwht import ops as fops
-
-        HDA = fops.fwht(DA)
-    else:
-        HDA = _fwht(DA)
-    HDA = HDA * (1.0 / math.sqrt(n_pad))  # orthonormal H
-    rows = jax.random.randint(kp, (m,), 0, n_pad)
-    return jnp.take(HDA, rows, axis=0) * math.sqrt(n_pad / m)
+# ------------------------------------------------------------------ leverage utils
 
 
-def uniform_sketch(
-    key: jax.Array, A: jax.Array, m: int, *, replacement: bool = True
+def leverage_scores(
+    A: jax.Array, *, method: str = "qr", key: Optional[jax.Array] = None
 ) -> jax.Array:
-    """Uniform row sampling, scaled so E[SᵀS] = I (each kept row × sqrt(n/m))."""
-    n = A.shape[0]
-    if replacement:
-        rows = jax.random.randint(key, (m,), 0, n)
-    else:
-        # Gumbel top-k trick == sampling without replacement, jit-friendly.
-        g = jax.random.gumbel(key, (n,))
-        rows = jax.lax.top_k(g, m)[1]
-    return jnp.take(A, rows, axis=0) * math.sqrt(n / m)
+    """Row leverage scores ℓ_i = ‖ũ_i‖² of A (sums to rank(A) = d).
 
-
-def leverage_scores(A: jax.Array, *, method: str = "qr") -> jax.Array:
-    """Row leverage scores ℓ_i = ‖ũ_i‖² of A (sums to rank(A) = d)."""
+    ``key`` randomizes the sketched ``approx`` path (Drineas et al. 2012) — pass a
+    per-worker key so approximate leverage sampling is i.i.d. across workers. The
+    exact qr/svd paths are deterministic and ignore it.
+    """
     if method == "svd":
         U, _, _ = jnp.linalg.svd(A, full_matrices=False)
         return jnp.sum(U * U, axis=1)
@@ -167,12 +136,44 @@ def leverage_scores(A: jax.Array, *, method: str = "qr") -> jax.Array:
         # Beyond-paper: sketched leverage scores (Drineas et al. 2012): compute R from
         # a QR of an SRHT sketch of A, then ℓ̂_i = ‖a_iᵀ R⁻¹‖². O(nd log n + nd²) → O(nd·r).
         n, d = A.shape
-        m = min(n, max(4 * d, 64))
-        SA = srht_sketch(jax.random.PRNGKey(0), A, m)
+        m = max(4 * d, 64)
+        if m >= n:
+            # Sketching to m >= n rows only loses information — exact is cheaper.
+            return leverage_scores(A, method="qr")
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        SA = srht_sketch(key, A, m)
         _, R = jnp.linalg.qr(SA)
         AR = jax.scipy.linalg.solve_triangular(R.T, A.T, lower=True).T
         return jnp.sum(AR * AR, axis=1)
     raise ValueError(f"unknown leverage method {method!r}")
+
+
+# ------------------------------------------------------- functional API (wrappers)
+#
+# Each kind function builds the matching SketchOp through the registry; they exist
+# for callers that think in terms of one kind rather than a SketchSpec.
+
+
+def gaussian_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
+    """S with i.i.d. N(0, 1/m) entries. E[SᵀS] = I. Unbiased estimator (Lemma 1)."""
+    return apply_sketch(SketchSpec("gaussian", m, use_kernel=use_kernel), key, A)
+
+
+def srht_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
+    """Randomized Hadamard (ROS) sketch: S = sqrt(n_pad/m) · P · (H/√n_pad) · D.
+
+    P samples m of n_pad rows uniformly with replacement (matching the paper's
+    Lemma 4 analysis, which assumes with-replacement sampling).
+    """
+    return apply_sketch(SketchSpec("srht", m, use_kernel=use_kernel), key, A)
+
+
+def uniform_sketch(
+    key: jax.Array, A: jax.Array, m: int, *, replacement: bool = True
+) -> jax.Array:
+    """Uniform row sampling, scaled so E[SᵀS] = I (each kept row × sqrt(n/m))."""
+    return apply_sketch(SketchSpec("uniform", m, replacement=replacement), key, A)
 
 
 def leverage_sketch(
@@ -184,12 +185,7 @@ def leverage_sketch(
 ) -> jax.Array:
     """Leverage-score sampling (paper §IV-C): P[row j] = ℓ_j / d, row scaled by
     1/sqrt(m·p_j) so that E[SᵀS] = I. Sampling is with replacement (Lemma 6)."""
-    if scores is None:
-        scores = leverage_scores(A)
-    p = scores / jnp.sum(scores)
-    rows = jax.random.categorical(key, jnp.log(p + 1e-30), shape=(m,))
-    scale = 1.0 / jnp.sqrt(m * jnp.take(p, rows))
-    return jnp.take(A, rows, axis=0) * scale[(...,) + (None,) * (A.ndim - 1)]
+    return apply_sketch(SketchSpec("leverage", m), key, A, scores=scores)
 
 
 def sjlt_sketch(
@@ -201,17 +197,7 @@ def sjlt_sketch(
     value ±1/√s, in buckets chosen uniformly: (SA)_r = Σ_{i: h(i)∋r} σ_i/√s · A_i.
     E[SᵀS] = I. s=1 is CountSketch.
     """
-    n = A.shape[0]
-    if use_kernel:
-        from repro.kernels.sjlt import ops as sops
-
-        return sops.sjlt_sketch(key, A, m, s=s)
-    kb, ks = jax.random.split(key)
-    buckets = jax.random.randint(kb, (n, s), 0, m)  # (n, s)
-    signs = jax.random.rademacher(ks, (n, s), dtype=A.dtype) * (1.0 / math.sqrt(s))
-    flat_vals = (signs[..., None] * A[:, None, ...]).reshape((n * s,) + A.shape[1:])
-    out = jax.ops.segment_sum(flat_vals, buckets.reshape(-1), num_segments=m)
-    return out
+    return apply_sketch(SketchSpec("sjlt", m, s=s, use_kernel=use_kernel), key, A)
 
 
 def hybrid_sketch(
@@ -226,37 +212,24 @@ def hybrid_sketch(
 ) -> jax.Array:
     """Paper §IV-D: uniform-sample m' rows (the part a worker can afford to *read*),
     then sketch m' → m with a better sketch (the part it can afford to *compute*)."""
-    k1, k2 = jax.random.split(key)
-    sampled = uniform_sketch(k1, A, m_prime, replacement=False)
-    if inner == "gaussian":
-        return gaussian_sketch(k2, sampled, m, use_kernel=use_kernel)
-    if inner == "sjlt":
-        return sjlt_sketch(k2, sampled, m, s=s, use_kernel=use_kernel)
-    if inner == "srht":
-        return srht_sketch(k2, sampled, m, use_kernel=use_kernel)
-    raise ValueError(f"unsupported hybrid inner sketch {inner!r}")
+    spec = SketchSpec("hybrid", m, m_prime=m_prime, inner=inner, s=s, use_kernel=use_kernel)
+    return apply_sketch(spec, key, A)
 
 
 # --------------------------------------------------------------------------- dispatch
 
 
-def apply_sketch(spec: SketchSpec, key: jax.Array, A: jax.Array) -> jax.Array:
-    """Apply the sketch described by ``spec`` along axis 0 of A."""
-    if spec.kind == "gaussian":
-        return gaussian_sketch(key, A, spec.m, use_kernel=spec.use_kernel)
-    if spec.kind == "srht":
-        return srht_sketch(key, A, spec.m, use_kernel=spec.use_kernel)
-    if spec.kind == "uniform":
-        return uniform_sketch(key, A, spec.m, replacement=spec.replacement)
-    if spec.kind == "leverage":
-        return leverage_sketch(key, A, spec.m)
-    if spec.kind == "sjlt":
-        return sjlt_sketch(key, A, spec.m, s=spec.s, use_kernel=spec.use_kernel)
-    if spec.kind == "hybrid":
-        return hybrid_sketch(
-            key, A, spec.m, spec.m_prime, inner=spec.inner, s=spec.s, use_kernel=spec.use_kernel
-        )
-    raise ValueError(spec.kind)
+def apply_sketch(
+    spec: SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    *,
+    scores: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Apply the sketch described by ``spec`` along axis 0 of A (registry dispatch)."""
+    from repro.core import operators
+
+    return operators.apply(spec, key, A, scores=scores)
 
 
 def sketch_data(spec: SketchSpec, key: jax.Array, A: jax.Array, b: jax.Array):

@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import sketches as sk
+from repro.core import operators, sketches as sk
 
 
 # --------------------------------------------------------------------------- direct
@@ -103,21 +103,17 @@ def sketch_least_norm(
     """One worker of the right-sketch least-norm problem (§V, n < d):
     ẑ = argmin ‖z‖² s.t. (ASᵀ)z = b;  x̂ = Sᵀẑ.
 
-    Implemented without materializing S: ASᵀ = (S Aᵀ)ᵀ and Sᵀẑ = (ẑᵀ S)ᵀ, where the
-    second product reuses the sketch applied to the m×m identity only when S has no
-    fast adjoint. For sampling-type sketches the adjoint is a cheap scatter; for
-    simplicity and because m is small, we apply S to [Aᵀ, I_d-free] via a single
-    sketch of Aᵀ and recover Sᵀẑ by sketching the standard basis lazily — in practice
-    (and in the paper) the right sketch is Gaussian, whose adjoint we materialize at
-    cost m·d (same cost as SAᵀ itself).
+    S never exists in memory: ``ASᵀ = (S Aᵀ)ᵀ`` is one forward application of the
+    operator to Aᵀ, and ``Sᵀẑ`` is its adjoint — a scatter for sampling sketches, an
+    inverse-transform for SRHT, streamed counter-RNG tiles for Gaussian.
     """
-    # SAt : (m, n) = S @ Aᵀ, and we need Sᵀ ẑ. Materializing S (m × d) is O(md) memory,
-    # acceptable because m = O(n) << d in the right-sketch regime.
     d = A.shape[1]
-    S = sk.materialize(spec, key, d, dtype=A.dtype)  # (m, d)
-    M = A @ S.T  # (n, m)
-    z = least_norm(M, b)  # (m,)
-    return S.T @ z
+    # Data-independent right sketches only; a leverage right-sketch of I_d is uniform.
+    scores = jnp.ones((d,), A.dtype) if spec.kind == "leverage" else None
+    op = operators.make_operator(spec, key, d, scores=scores)
+    SAt = op.apply(A.T)  # (m, n) = S @ Aᵀ
+    z = least_norm(SAt.T, b)  # (m,) or (m, k)
+    return op.adjoint(z)
 
 
 def residual_cost(A: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:

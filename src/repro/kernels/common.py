@@ -57,6 +57,29 @@ def key_to_words(key: jax.Array) -> tuple[jax.Array, jax.Array]:
     return data[0], data[1]
 
 
+def counter_rademacher(k0, k1, c0, c1, dtype=jnp.float32) -> jax.Array:
+    """One ±1 sign per counter pair (low bit of the first threefry stream)."""
+    b0, _ = threefry2x32(k0, k1, c0, c1)
+    return (1 - 2 * (b0 & jnp.uint32(1)).astype(jnp.int32)).astype(dtype)
+
+
+def sjlt_counter_params(k0, k1, row_idx: jax.Array, s: int, m: int, dtype=jnp.float32):
+    """SJLT buckets/signs for the given *global* row indices, counter-derived.
+
+    Row ``i``'s parameters are a pure function of ``(key, i)`` — independent of
+    how rows are blocked or which shard asks — so blocked/streamed application and
+    the Pallas kernel all see the same S. Returns ``(buckets, signs)`` of shape
+    ``(len(row_idx), s)`` with signs scaled by 1/√s (``E[SᵀS] = I``). Bucket ids use
+    a modulo reduction of the uint32 stream; the bias is ≤ m·2⁻³² per draw.
+    """
+    r = row_idx.astype(jnp.uint32)[:, None]
+    t = jnp.arange(s, dtype=jnp.uint32)[None, :]
+    b0, b1 = threefry2x32(k0, k1, r, t)
+    buckets = (b0 % jnp.uint32(m)).astype(jnp.int32)
+    signs = (1 - 2 * (b1 & jnp.uint32(1)).astype(jnp.int32)).astype(dtype)
+    return buckets, signs * jnp.asarray(1.0 / np.sqrt(s), dtype)
+
+
 def hadamard_matrix(k: int, dtype=jnp.float32) -> jax.Array:
     """Unnormalized k×k Hadamard (Sylvester): H[i,j] = (-1)^popcount(i&j), k pow2."""
     if k & (k - 1):

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -19,13 +18,13 @@ BLOCK_D = 256
 def sjlt_params(key: jax.Array, n: int, s: int, m: int, dtype=jnp.float32):
     """Bucket indices and ±1/√s signs — the (only) randomness of the sketch.
 
-    Identical sampling to ``repro.core.sketches.sjlt_sketch`` so the kernel and the
-    pure-jnp path draw the same S for the same key.
+    Counter-derived per *global* row index (``common.sjlt_counter_params``), the
+    identical draw ``repro.core.operators.SJLTOp`` uses, so the kernel and the
+    pure-jnp path see the same S for the same key — and so any row block's
+    parameters can be regenerated independently when streaming.
     """
-    kb, ks = jax.random.split(key)
-    buckets = jax.random.randint(kb, (n, s), 0, m)
-    signs = jax.random.rademacher(ks, (n, s), dtype=dtype) * (1.0 / math.sqrt(s))
-    return buckets, signs
+    k0, k1 = common.key_to_words(key)
+    return common.sjlt_counter_params(k0, k1, jnp.arange(n), s, m, dtype=dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "interpret", "use_ref"))

@@ -23,10 +23,11 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.utils.compat import shard_map
 
 from repro.configs.base import ArchConfig
-from repro.core import gradcomp
+from repro.core import averaging, gradcomp
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_update
 from repro.utils import tree as tu
@@ -74,10 +75,7 @@ def make_sketch_dp_step(
     comp = comp or gradcomp.GradCompressionConfig(enabled=False)
 
     def local_grads(params, local_batch, key, mask_all):
-        widx = jnp.int32(0)
-        for name in axis_names:
-            widx = widx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-        mask = mask_all[widx]
+        mask = mask_all[averaging.worker_index(axis_names)]
 
         def loss_fn(p):
             loss, aux = lm.lm_loss(p, cfg, local_batch, rules=None, plan=lm.ExecPlan(remat=remat))

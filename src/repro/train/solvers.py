@@ -15,7 +15,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import averaging, privacy, sketches as sk, solve
+from repro.core import averaging, operators, privacy, sketches as sk, solve
 from repro.utils import prng
 
 
@@ -49,13 +49,12 @@ def fit_head(
         for w in range(q):
             accountant.record(spec.m, n, gamma=gamma, tag=f"head-fit worker {w}")
 
-    def worker(widx):
-        wkey = prng.worker_key(key, widx)
-        SH = sk.apply_sketch(spec, wkey, jnp.concatenate([H, Y.reshape(n, -1)], axis=1))
-        d = H.shape[1]
-        return solve.lstsq(SH[:, :d], SH[:, d:], reg=reg)
-
-    Ws = jax.vmap(worker)(jnp.arange(q))  # (q, d, k)
+    # All q workers' sketches in one batched pass over the feature matrix (the
+    # master-sketch pattern): H is read once, the q projections batch on the MXU.
+    keys = prng.worker_keys(key, q)
+    SHs = operators.apply_batched(spec, keys, jnp.concatenate([H, Y.reshape(n, -1)], axis=1))
+    d = H.shape[1]
+    Ws = jax.vmap(lambda SH: solve.lstsq(SH[:, :d], SH[:, d:], reg=reg))(SHs)  # (q, d, k)
     W = averaging.masked_average(Ws, straggler_mask)
     return W.reshape(H.shape[1:] + Y.shape[1:]) if Y.ndim > 1 else W[:, 0]
 

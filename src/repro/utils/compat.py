@@ -1,0 +1,44 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``shard_map`` lived in ``jax.experimental.shard_map`` through the 0.4/0.5 series and
+was promoted to a top-level ``jax.shard_map`` later; the keyword controlling the
+replication check was also renamed (``check_rep`` → ``check_vma``). Everything in
+this repo imports :func:`shard_map` from here so exactly one place knows about the
+difference.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax <= 0.5: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_PARAMS = set(inspect.signature(_shard_map_impl).parameters)
+_CHECK_KW = "check_vma" if "check_vma" in _PARAMS else "check_rep"
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` for jax versions that predate it.
+
+    Inside shard_map/pmap, the size of a named mesh axis. The ``psum(1)`` fallback
+    is the classic idiom and constant-folds to the same static value.
+    """
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with a stable signature across jax versions.
+
+    ``check_vma`` maps onto whichever of ``check_vma``/``check_rep`` the installed
+    jax understands; ``None`` keeps the library default.
+    """
+    kwargs = {}
+    if check_vma is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

@@ -18,6 +18,16 @@ def worker_key(base_key: jax.Array, worker_id: jax.Array | int, round_id: int = 
     return jax.random.fold_in(k, worker_id)
 
 
+def worker_keys(base_key: jax.Array, q: int, round_id: int = 0) -> jax.Array:
+    """The (q,)-batched stack of ``worker_key(base_key, w, round_id)`` for w < q.
+
+    Feed this to ``operators.apply_batched`` so the master computes all q workers'
+    sketches in one pass; worker w of a shard_map'd mesh derives the identical key
+    on its own — the two execution styles agree bit-for-bit.
+    """
+    return jax.vmap(lambda w: worker_key(base_key, w, round_id))(jnp.arange(q))
+
+
 def split_tree(key: jax.Array, tree) -> "jax.tree_util.PyTreeDef":
     """One independent key per leaf of ``tree``, with the tree's structure."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)

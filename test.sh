@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point.
+#
+# Forces 8 fake host devices so tests/test_multidevice.py exercises a real
+# 8-device mesh on CPU (its subprocesses set the same flag for themselves; this
+# makes the main process match, so mesh-building code paths see q > 1 too).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

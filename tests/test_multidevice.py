@@ -48,6 +48,10 @@ def test_distributed_sketch_solve_matches_local_average():
         mask = jnp.array([0., 0., 0., 0., 1., 1., 1., 1.])
         xbar_m = distributed.distributed_sketch_solve(mesh, spec, key, A, b, straggler_mask=mask)
         np.testing.assert_allclose(np.asarray(xbar_m), np.asarray(xs[4:].mean(0)), rtol=1e-4, atol=1e-4)
+
+        # master-sketch mode (batched apply, one pass over A) == worker-sketch mode
+        xbar_ms = distributed.distributed_sketch_solve_master(mesh, spec, key, A, b)
+        np.testing.assert_allclose(np.asarray(xbar_ms), np.asarray(xs.mean(0)), rtol=1e-4, atol=1e-4)
         print("DIST_OK")
         """
     )

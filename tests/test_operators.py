@@ -1,0 +1,174 @@
+"""SketchOp layer: adjoint consistency, blocked streaming, batched application."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as ops, sketches as sk, solve
+from repro.utils import prng
+
+N, D, M = 100, 7, 24  # N deliberately not a power of two / multiple of block sizes
+
+
+def _op(kind, key, n=N, m=M):
+    if kind == "hybrid":
+        spec = sk.SketchSpec("hybrid", m, m_prime=min(2 * m, n), inner="sjlt", s=2)
+    elif kind == "sjlt":
+        spec = sk.SketchSpec(kind, m, s=3)
+    elif kind == "uniform":
+        spec = sk.SketchSpec(kind, m, replacement=False)
+    else:
+        spec = sk.SketchSpec(kind, m)
+    scores = None
+    if kind == "leverage":
+        A = jax.random.normal(jax.random.PRNGKey(7), (n, 5))
+        scores = sk.leverage_scores(A)
+    return ops.make_operator(spec, key, n, scores=scores)
+
+
+@pytest.mark.parametrize("kind", sk.KINDS)
+def test_adjoint_consistency(kind):
+    """⟨S x, y⟩ == ⟨x, Sᵀ y⟩ for every registered kind."""
+    op = _op(kind, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N,))
+    y = jax.random.normal(jax.random.PRNGKey(2), (M,))
+    lhs = float(jnp.vdot(op.apply(x), y))
+    rhs = float(jnp.vdot(x, op.adjoint(y)))
+    assert abs(lhs - rhs) < 1e-3 * max(1.0, abs(lhs)), (kind, lhs, rhs)
+
+
+@pytest.mark.parametrize("kind", sk.KINDS)
+def test_adjoint_matches_materialized_transpose(kind):
+    op = _op(kind, jax.random.PRNGKey(5))
+    Y = jax.random.normal(jax.random.PRNGKey(4), (M, 3))
+    St = np.asarray(op.materialize()).T
+    np.testing.assert_allclose(
+        np.asarray(op.adjoint(Y)), St @ np.asarray(Y), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("kind", sk.KINDS)
+@pytest.mark.parametrize("block_rows", [16, 33])
+def test_apply_blocked_matches_apply(kind, block_rows):
+    """Streaming over row tiles == one-shot, for block sizes that don't divide n."""
+    op = _op(kind, jax.random.PRNGKey(11))
+    A = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    np.testing.assert_allclose(
+        np.asarray(op.apply_blocked(A, block_rows=block_rows)),
+        np.asarray(op.apply(A)),
+        rtol=1e-4,
+        atol=1e-4,
+        err_msg=f"{kind} block_rows={block_rows}",
+    )
+
+
+def test_blocked_gaussian_bit_comparable():
+    """Acceptance: blocked Gaussian reproduces unblocked at atol 1e-5 for n not
+    divisible by the block size (tile (i,j) of S is a pure function of (key,i,j))."""
+    n, d, m, block = 1000, 16, 64, 96  # 1000 % 96 != 0
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    op = ops.make_operator(sk.SketchSpec("gaussian", m), jax.random.PRNGKey(1), n)
+    got = np.asarray(op.apply_blocked(A, block_rows=block))
+    want = np.asarray(op.apply(A))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["gaussian", "srht", "sjlt", "uniform"])
+def test_apply_batched_matches_loop(kind):
+    """vmapped multi-worker application == a Python loop of per-key applies."""
+    spec = sk.SketchSpec(kind, M, s=3)
+    keys = jax.random.split(jax.random.PRNGKey(9), 5)
+    A = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    batched = ops.apply_batched(spec, keys, A)
+    looped = jnp.stack([ops.apply(spec, keys[i], A) for i in range(5)])
+    assert batched.shape == (5, M, D)
+    np.testing.assert_allclose(
+        np.asarray(batched), np.asarray(looped), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_sketch_data_batched_shares_S_per_worker():
+    n, d, q = 64, 5, 4
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    spec = sk.SketchSpec("gaussian", M)
+    keys = prng.worker_keys(jax.random.PRNGKey(2), q)
+    SA, Sb = ops.sketch_data_batched(spec, keys, A, b)
+    assert SA.shape == (q, M, d) and Sb.shape == (q, M)
+    for w in range(q):
+        SAw, Sbw = sk.sketch_data(spec, prng.worker_key(jax.random.PRNGKey(2), w), A, b)
+        np.testing.assert_allclose(np.asarray(SA[w]), np.asarray(SAw), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(Sb[w]), np.asarray(Sbw), rtol=1e-5, atol=1e-5)
+
+
+def test_registry_dispatch_replaces_if_chain():
+    """apply_sketch goes through the registry and matches the op's own apply."""
+    A = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    key = jax.random.PRNGKey(1)
+    spec = sk.SketchSpec("sjlt", M, s=2)
+    np.testing.assert_array_equal(
+        np.asarray(sk.apply_sketch(spec, key, A)),
+        np.asarray(ops.make_operator(spec, key, N).apply(A)),
+    )
+    with pytest.raises(ValueError, match="unknown sketch kind"):
+        sk.SketchSpec("fourier", M)
+
+
+def test_leverage_requires_scores():
+    with pytest.raises(ValueError, match="data-dependent"):
+        ops.make_operator(sk.SketchSpec("leverage", M), jax.random.PRNGKey(0), N)
+
+
+def test_sketch_least_norm_uses_adjoint():
+    """Right-sketch solver: x̂ = Sᵀẑ via op.adjoint matches the explicit-S formula."""
+    n, d = 12, 64
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    spec = sk.SketchSpec("gaussian", 4 * n)
+    key = jax.random.PRNGKey(2)
+    x = solve.sketch_least_norm(spec, key, A, b)
+    S = np.asarray(ops.make_operator(spec, key, d).materialize())
+    z = solve.least_norm(jnp.asarray(np.asarray(A) @ S.T), b)
+    np.testing.assert_allclose(np.asarray(x), S.T @ np.asarray(z), rtol=1e-3, atol=1e-4)
+
+
+def test_leverage_scores_approx_randomized_by_key():
+    """Satellite fix: approx leverage scores must depend on the provided key."""
+    A = jax.random.normal(jax.random.PRNGKey(0), (256, 6))
+    s1 = sk.leverage_scores(A, method="approx", key=jax.random.PRNGKey(1))
+    s2 = sk.leverage_scores(A, method="approx", key=jax.random.PRNGKey(2))
+    assert not np.allclose(np.asarray(s1), np.asarray(s2))
+    # still close to the exact scores regardless of key
+    exact = sk.leverage_scores(A, method="qr")
+    assert float(jnp.max(jnp.abs(s1 - exact))) < 0.5
+
+
+def test_gaussian_op_matches_pallas_kernel_stream():
+    """The jnp path and the RNG-fused Pallas kernel draw the same counter-based S."""
+    n, d, m = 96, 17, 32
+    A = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    key = jax.random.PRNGKey(5)
+    spec_j = sk.SketchSpec("gaussian", m)
+    spec_k = sk.SketchSpec("gaussian", m, use_kernel=True)
+    np.testing.assert_allclose(
+        np.asarray(sk.apply_sketch(spec_j, key, A)),
+        np.asarray(sk.apply_sketch(spec_k, key, A)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_trailing_dims_and_vectors():
+    """Operators accept (n,), (n, d) and (n, d1, d2) inputs."""
+    op = _op("gaussian", jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N,))
+    X3 = jax.random.normal(jax.random.PRNGKey(2), (N, 3, 2))
+    assert op.apply(x).shape == (M,)
+    assert op.apply(X3).shape == (M, 3, 2)
+    assert op.adjoint(op.apply(x)).shape == (N,)
+    np.testing.assert_allclose(
+        np.asarray(op.apply(X3)[:, :, 0]),
+        np.asarray(op.apply(X3[:, :, 0])),
+        rtol=1e-5,
+        atol=1e-5,
+    )
