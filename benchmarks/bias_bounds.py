@@ -11,13 +11,16 @@ import jax.numpy as jnp
 
 from repro.core import sketches as sk, solve, theory
 from repro.utils import prng
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, smoke, write_csv
 
 
 def run(quick: bool = True):
     n, d = (2048, 16) if quick else (8192, 32)
     m = 16 * d
     trials = 300 if quick else 1000
+    if smoke():
+        n, d, trials = 512, 8, 16
+    m = 16 * d
     key = jax.random.PRNGKey(3)
     A = jax.random.normal(key, (n, d))
     b = jax.random.normal(jax.random.PRNGKey(4), (n,))

@@ -12,6 +12,12 @@ import numpy as np
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 
+def smoke() -> bool:
+    """True under `benchmarks.run --smoke` / `test.sh --bench-smoke`: every module
+    shrinks to one tiny shape so the whole sweep finishes in CI time."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
 def block(x):
     return jax.block_until_ready(x)
 

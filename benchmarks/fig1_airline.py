@@ -16,7 +16,7 @@ import numpy as np
 from repro.core import averaging, sketches as sk, solve
 from repro.data import airline_like
 from repro.utils import prng
-from benchmarks.common import print_table, simulate_worker_times, write_csv
+from benchmarks.common import print_table, simulate_worker_times, smoke, write_csv
 
 
 def _curve(A, b, f_star, spec, key, q, runtimes):
@@ -41,10 +41,14 @@ def _curve(A, b, f_star, spec, key, q, runtimes):
 def run(quick: bool = True):
     n = 100_000 if quick else 1_000_000
     q = 25 if quick else 100
+    if smoke():
+        n, q = 4096, 4
     key = jax.random.PRNGKey(0)
     A, b_real, meta = airline_like(key, n)
     d = meta["d"]
     m, m_prime = (16 * d, 64 * d) if quick else (32 * d, 128 * d)
+    if smoke():
+        m, m_prime = 4 * d, 16 * d  # keep m' <= n at the tiny shape
 
     x_star = solve.lstsq(A, b_real)
     f_star_real = float(solve.residual_cost(A, b_real, x_star))

@@ -14,13 +14,15 @@ from repro.core import sketches as sk, solve
 from repro.data import emnist_like
 from repro.data.regression import accuracy
 from repro.utils import prng
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, smoke, write_csv
 
 
 def run(quick: bool = True):
     n_train, n_test = (30_000, 5_000) if quick else (200_000, 30_000)
     q = 20 if quick else 100
     m, s = 2000, 20
+    if smoke():
+        n_train, n_test, q, m = 3000, 500, 2, 1000
     key = jax.random.PRNGKey(0)
     A, B, meta = emnist_like(key, n_train)
     At, Bt, meta_t = emnist_like(jax.random.PRNGKey(1), n_test)

@@ -13,13 +13,15 @@ import jax.numpy as jnp
 from repro.core import averaging, sketches as sk, solve
 from repro.data import student_t_regression
 from repro.utils import prng
-from benchmarks.common import print_table, simulate_worker_times, write_csv
+from benchmarks.common import print_table, simulate_worker_times, smoke, write_csv
 import numpy as np
 
 
 def run(quick: bool = True):
     n, d = (200_000, 128) if quick else (2_000_000, 512)
     q = 32 if quick else 200
+    if smoke():
+        n, d, q = 8192, 32, 4
     m, m_prime = (10 * d, 50 * d)
     rows = []
     for df in (1.5, 1.7):
@@ -39,7 +41,7 @@ def run(quick: bool = True):
             xs = jax.lax.map(worker, jnp.arange(q), batch_size=8)
             runtimes = simulate_worker_times(jax.random.PRNGKey(hash(name) % 2**31), q, mean_s=mean_times[name])
             order = np.argsort(runtimes)
-            for kk in (1, 4, 16, q):
+            for kk in sorted({k for k in (1, 4, 16, q) if k <= q}):
                 mask = np.zeros(q, np.float32)
                 mask[order[:kk]] = 1.0
                 xbar = averaging.masked_average(xs, jnp.asarray(mask))

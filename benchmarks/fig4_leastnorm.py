@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core import averaging, sketches as sk, solve
 from repro.utils import prng
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, smoke, write_csv
 
 
 def _least_norm_curve(A, b, specs, q, key, rows, tag):
@@ -45,6 +45,8 @@ def run(quick: bool = True):
     A = jax.random.normal(key, (n, d))
     b = jax.random.normal(jax.random.PRNGKey(1), (n,))
     q = 50 if quick else 100
+    if smoke():
+        q = 4
     specs = {
         "gaussian": sk.SketchSpec("gaussian", m),
         "uniform": sk.SketchSpec("uniform", m, replacement=False),
@@ -55,6 +57,8 @@ def run(quick: bool = True):
     # plot (b): airline-like with pairwise interactions (underdetermined)
     n2 = 400 if quick else 2000
     base_d = 24 if quick else 107
+    if smoke():
+        n2, base_d = 100, 12
     kb = jax.random.PRNGKey(2)
     X = (jax.random.uniform(kb, (n2, base_d)) < 0.15).astype(jnp.float32)
     inter = jnp.einsum("ni,nj->nij", X, X).reshape(n2, base_d * base_d)

@@ -10,11 +10,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gradcomp
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, smoke, write_csv
 
 
 def run(quick: bool = True):
     D = 1 << 16 if quick else 1 << 20
+    if smoke():
+        D = 1 << 12
     key = jax.random.PRNGKey(0)
     g = {"w": jax.random.normal(key, (D,)), "b": jax.random.normal(jax.random.PRNGKey(1), (D // 16,))}
     rows = []

@@ -13,11 +13,13 @@ import jax.numpy as jnp
 from repro.core import ihs, sketches as sk, solve
 from repro.data import gaussian_regression
 from repro.utils import prng
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, smoke, write_csv
 
 
 def run(quick: bool = True):
     n, d = (8192, 64) if quick else (65536, 256)
+    if smoke():
+        n, d = 1024, 16
     m = 8 * d
     key = jax.random.PRNGKey(0)
     A, b, _ = gaussian_regression(key, n, d, noise=0.5)

@@ -14,11 +14,13 @@ from repro.kernels.fwht import ops as fwht_ops
 from repro.kernels.gaussian import ops as g_ops
 from repro.kernels.sjlt import ops as sjlt_ops
 from repro.roofline.hw import V5E
-from benchmarks.common import print_table, timeit, write_csv
+from benchmarks.common import print_table, smoke, timeit, write_csv
 
 
 def run(quick: bool = True):
     n, d, m, s = (2048, 128, 256, 4) if quick else (8192, 512, 1024, 4)
+    if smoke():
+        n, d, m = 512, 128, 128
     key = jax.random.PRNGKey(0)
     A = jax.random.normal(key, (n, d), jnp.float32)
     rows = []

@@ -8,6 +8,7 @@ aggregates pass/fail-style summaries where a benchmark encodes a checkable claim
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -18,6 +19,7 @@ from benchmarks import (
     fig2_emnist,
     fig3_synthetic,
     fig4_leastnorm,
+    fused_solve_bench,
     gradcomp_bench,
     ihs_baseline,
     kernel_bench,
@@ -40,6 +42,7 @@ MODULES = {
     "sketch_dp": sketch_dp_ablation,
     "kernels": kernel_bench,
     "sketch_ops": sketch_ops_bench,
+    "fused": fused_solve_bench,
 }
 
 
@@ -47,7 +50,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
     ap.add_argument("--only", default="", help="comma-separated module keys")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="one tiny shape per benchmark (sets REPRO_BENCH_SMOKE=1) — the "
+        "./test.sh --bench-smoke CI mode; numbers are not meaningful",
+    )
     args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     keys = [k.strip() for k in args.only.split(",") if k.strip()] or list(MODULES)
     unknown = [k for k in keys if k not in MODULES]

@@ -23,7 +23,7 @@ from repro.core import gradcomp
 from repro.data import lm_batch
 from repro.optim import AdamWConfig, adamw_update, init_opt_state
 from repro.train.step import make_loss_fn
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, smoke, write_csv
 
 
 def run(quick: bool = True):
@@ -32,6 +32,8 @@ def run(quick: bool = True):
         num_heads=2, num_kv_heads=1, head_dim=16, vocab_size=97,
     )
     steps = 30 if quick else 120
+    if smoke():
+        steps = 3
     q, B, S = 4, 8, 64
     opt_cfg = AdamWConfig(lr=3e-3)
     loss_fn = make_loss_fn(cfg)

@@ -56,13 +56,16 @@ def _specs(quick: bool):
 
 
 def run(quick: bool = True):
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
     n, d = (2048, 32) if quick else (65536, 128)
+    repeat = 3 if smoke else 15
+    backend = jax.default_backend()
     key = jax.random.PRNGKey(0)
     A = jax.random.normal(key, (n, d), jnp.float32)
     keys = jax.random.split(jax.random.PRNGKey(1), Q)
 
     rows = []
-    summary = {"n": n, "d": d, "q": Q}
+    summary = {"backend": backend, "n": n, "d": d, "q": Q}
     for name, spec in _specs(quick):
         batched = jax.jit(lambda ks, A, spec=spec: ops.apply_batched(spec, ks, A))
         single = jax.jit(lambda k, A, spec=spec: ops.apply(spec, k, A))
@@ -70,7 +73,7 @@ def run(quick: bool = True):
         def loop():
             return jnp.stack([single(keys[i], A) for i in range(Q)])
 
-        t_loop, t_batched = _time_pair(loop, lambda: batched(keys, A))
+        t_loop, t_batched = _time_pair(loop, lambda: batched(keys, A), repeat=repeat)
 
         # correctness of the batched path against the loop it replaces
         err_batched = float(jnp.max(jnp.abs(batched(keys, A) - loop())))
@@ -84,12 +87,17 @@ def run(quick: bool = True):
         err_blocked = float(jnp.max(jnp.abs(blocked(A) - one_shot(A))))
         ref_scale = max(1.0, float(jnp.max(jnp.abs(one_shot(A)))))
 
+        gbps = Q * 4 * n * d / t_batched / 1e9  # q reads of A per batched call
         rows.append(
             {
                 "sketch": name,
+                "backend": backend,
+                "n": n,
+                "d": d,
                 "loop_ms": t_loop * 1e3,
                 "batched_ms": t_batched * 1e3,
                 "batched_speedup": t_loop / t_batched,
+                "batched_gbps": gbps,
                 "batched_maxerr": err_batched,
                 "oneshot_ms": t_oneshot * 1e3,
                 "blocked_ms": t_blocked * 1e3,
@@ -100,6 +108,7 @@ def run(quick: bool = True):
             "loop_s": t_loop,
             "batched_s": t_batched,
             "batched_speedup": t_loop / t_batched,
+            "batched_gbps": gbps,
             "batched_maxerr": err_batched,
             "blocked_maxerr_at_block96": err_blocked,
             "blocked_matches_1e-5": bool(err_blocked < 1e-5 * ref_scale),

@@ -16,12 +16,14 @@ import numpy as np
 from repro.core import sketches as sk, solve, theory
 from repro.data import gaussian_regression
 from repro.utils import prng
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, smoke, write_csv
 
 
 def run(quick: bool = True):
     n, d = (2048, 24) if quick else (8192, 48)
     trials = 200 if quick else 600
+    if smoke():
+        n, d, trials = 512, 8, 16
     key = jax.random.PRNGKey(7)
     A, b, _ = gaussian_regression(key, n, d, noise=1.0, planted=True)
     x_star = solve.lstsq(A, b)
@@ -68,6 +70,8 @@ def run(quick: bool = True):
 
     # Lemma 7 (right sketch): n < d
     n2, d2 = (24, 512) if quick else (48, 1024)
+    if smoke():
+        n2, d2 = 12, 128
     A2, b2, _ = gaussian_regression(jax.random.PRNGKey(8), n2, d2, noise=0.0, planted=False)
     x_star2 = solve.least_norm(A2, b2)
     f_star2 = float(jnp.vdot(x_star2, x_star2))

@@ -44,12 +44,17 @@ def distributed_sketch_solve(
     *,
     axis_names: tuple = ("data",),
     reg: float = 0.0,
-    method: str = "qr",
+    method: str = "fused",
     straggler_mask: Optional[jax.Array] = None,
     row_sharded: bool = False,
     round_id: int = 0,
 ):
     """Algorithm 1 over ``mesh``: one sketch-and-solve worker per shard of axis_names.
+
+    Each worker takes the fused single-pass sketch→Gram path by default
+    (``method="fused"`` in :func:`repro.core.solve.sketch_and_solve`): it streams
+    its (G_k, c_k) out of one pass over the local copy of [A | b] and solves d×d,
+    never materializing S_kA. Pass ``method="qr"`` for the two-pass reference.
 
     Args:
       straggler_mask: optional (q,) float mask of which workers made the deadline
@@ -90,18 +95,21 @@ def distributed_sketch_solve_master(
     *,
     axis_names: tuple = ("data",),
     reg: float = 0.0,
-    method: str = "qr",
+    method: str = "fused",
     straggler_mask: Optional[jax.Array] = None,
     round_id: int = 0,
 ):
     """Algorithm 1 in *master-sketch* mode (the paper's privacy deployment: only the
-    master touches raw rows; workers see (S_kA, S_kb)).
+    master touches raw rows; workers see only sketch products).
 
-    All q sketches are computed in one batched pass over A
-    (``operators.apply_batched``) instead of q per-worker re-reads, then sharded so
-    each worker solves its own m×d problem and joins the masked psum average.
-    Worker keys match :func:`distributed_sketch_solve`, so the two modes return the
-    same x̄ for the same inputs.
+    ``method="fused"`` (default): the master streams all q fused Grams
+    ``(G_k, c_k)`` in one mesh-parallel batched pass over [A | b]
+    (``operators.gram_batched`` — S_kA never materialized), ships O(d²) per worker
+    instead of O(m·d), and each worker's solve is a d×d Cholesky. Any other
+    ``method`` keeps the two-pass reference: batch-materialize (S_kA, S_kb) via
+    ``operators.sketch_data_batched`` and factorize per worker. Worker keys match
+    :func:`distributed_sketch_solve`, so the two modes return the same x̄ for the
+    same inputs (up to the solver's float tolerance).
     """
     q = 1
     for name in axis_names:
@@ -110,7 +118,31 @@ def distributed_sketch_solve_master(
         straggler_mask = jnp.ones((q,), jnp.float32)
 
     keys = prng.worker_keys(key, q, round_id)
-    SA, Sb = operators.sketch_data_batched(spec, keys, A, b)  # (q, m, d), (q, m[, k])
+
+    if method == "fused":
+        Gs, cs = operators.gram_batched(
+            spec, keys, A, b, mesh=mesh, axis_names=axis_names
+        )  # (q, d, d), (q, d[, k])
+
+        def worker_fused(G_blk, c_blk, mask_all):
+            widx = _worker_index(axis_names)
+            xk = solve.lstsq_gram(G_blk[0], c_blk[0], reg=reg)
+            mask = mask_all[widx]
+            num = jax.lax.psum(xk * mask, axis_names)
+            den = jax.lax.psum(mask, axis_names)
+            return num / jnp.maximum(den, 1.0)
+
+        fn = shard_map(
+            worker_fused,
+            mesh=mesh,
+            in_specs=(P(axis_names), P(axis_names), P()),
+            out_specs=P(),
+        )
+        return fn(Gs, cs, straggler_mask)
+
+    SA, Sb = operators.sketch_data_batched(
+        spec, keys, A, b, mesh=mesh, axis_names=axis_names
+    )  # (q, m, d), (q, m[, k])
 
     def worker(SA_blk, Sb_blk, mask_all):
         widx = _worker_index(axis_names)

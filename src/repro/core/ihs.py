@@ -9,9 +9,11 @@ converging geometrically but requiring synchronous rounds (each iteration needs 
 previous iterate — no straggler resilience), whereas Algorithm 1's averaging is fully
 asynchronous. Benchmarks put both on the same plots.
 
-The sketches S_t are independent of the iterates, so all ``iters`` sketched Hessian
-factors ``S_t A`` are computed up front by ``operators.apply_batched`` — one read of
-A instead of one per iteration — and the refinement loop is a ``lax.scan`` over them.
+The sketches S_t are independent of the iterates, and IHS only ever consumes ``S_t A``
+through its Gram ``H_t = (S_tA)ᵀ(S_tA)`` — so all ``iters`` sketched Hessians are
+computed up front by ``operators.gram_batched``, the fused single-pass sketch→Gram
+path: one read of A total, O(iters·d²) resident instead of O(iters·m·d), SA never
+materialized. The refinement loop is a ``lax.scan`` over the precomputed Grams.
 """
 from __future__ import annotations
 
@@ -25,10 +27,12 @@ from repro.utils import prng
 def _ihs_scan(spec, key, A, b, iters: int, reg: float):
     d = A.shape[1]
     keys = prng.worker_keys(key, iters)
-    SAs = operators.apply_batched(spec, keys, A)  # (iters, m, d): one pass over A
+    # Fused sketch→Gram: all iters Hessians (iters, d, d) in one pass over A each,
+    # without ever materializing any (m, d) sketch factor.
+    Gs, _ = operators.gram_batched(spec, keys, A)
 
-    def step(x, SA):
-        H = SA.T @ SA + reg * jnp.eye(d, dtype=A.dtype)
+    def step(x, G):
+        H = G.astype(A.dtype) + reg * jnp.eye(d, dtype=A.dtype)
         g = A.T @ (b - A @ x)
         L = jnp.linalg.cholesky(H)
         y = jax.scipy.linalg.solve_triangular(L, g, lower=True)
@@ -36,7 +40,7 @@ def _ihs_scan(spec, key, A, b, iters: int, reg: float):
         return x, x
 
     x0 = jnp.zeros((d,), A.dtype)
-    return jax.lax.scan(step, x0, SAs)
+    return jax.lax.scan(step, x0, Gs)
 
 
 def ihs_solve(

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Callable, Dict, Optional
 
 import jax
@@ -105,24 +106,111 @@ def _from_2d(Y2: jax.Array, batch: tuple) -> jax.Array:
     return Y2.reshape((Y2.shape[0],) + batch)
 
 
-def _scan_row_blocks(A2: jax.Array, n: int, block_rows: int, init: jax.Array, reducer):
+def _scan_row_blocks(
+    A2: jax.Array, n: int, block_rows: int, init: jax.Array, reducer, *, double_buffer: bool = True
+):
     """Shared blocked-streaming scaffold: ``lax.scan`` of ``reducer(acc, j0, A_blk)``
     over zero-padded f32 row tiles of A2 (2-D). Zero rows beyond n contribute
     nothing to any registered reducer (matmul against zeros / gather of zeros /
-    scatter of zeros), so no masking is needed."""
+    scatter of zeros), so no masking is needed.
+
+    Double-buffered by default: the scan carry holds the *prefetched* next tile
+    alongside the accumulator, and each step issues the fetch of tile i+1 before
+    consuming tile i. The fetch has no data dependence on the reduction, so XLA is
+    free to overlap the copy/DMA of the next tile with the current tile's matmul —
+    the classic two-slot pipeline, expressed as an async-friendly scan carry. The
+    eager pre-reshaped path is kept (``double_buffer=False``) as the reference.
+    """
     bs = max(1, min(block_rows, n))
     nb = -(-n // bs)
     if nb * bs != n:
         A2 = jnp.pad(A2, ((0, nb * bs - n), (0, 0)))
-    blocks = A2.reshape(nb, bs, A2.shape[1]).astype(jnp.float32)
-    j0s = jnp.arange(nb, dtype=jnp.int32) * bs
+    Af = A2.astype(jnp.float32)
 
-    def body(acc, xs):
-        j0, Ab = xs
-        return reducer(acc, j0, Ab), None
+    if nb == 1:
+        return reducer(init, jnp.int32(0), Af)
 
-    acc, _ = jax.lax.scan(body, init, (j0s, blocks))
+    if not double_buffer:
+        blocks = Af.reshape(nb, bs, Af.shape[1])
+        j0s = jnp.arange(nb, dtype=jnp.int32) * bs
+
+        def body(acc, xs):
+            j0, Ab = xs
+            return reducer(acc, j0, Ab), None
+
+        acc, _ = jax.lax.scan(body, init, (j0s, blocks))
+        return acc
+
+    def fetch(i):
+        return jax.lax.dynamic_slice_in_dim(Af, i * bs, bs, axis=0)
+
+    def body(carry, i):
+        acc, cur = carry
+        nxt = fetch(jnp.minimum(i + 1, nb - 1))  # prefetch: independent of the reduce
+        acc = reducer(acc, i * bs, cur)
+        return (acc, nxt), None
+
+    (acc, _), _ = jax.lax.scan(body, (init, fetch(jnp.int32(0))), jnp.arange(nb, dtype=jnp.int32))
     return acc
+
+
+def _scan_row_blocks_joint(
+    A2: jax.Array, B2: jax.Array, n: int, block_rows: int, init: jax.Array, reducer
+):
+    """Like :func:`_scan_row_blocks`, but streams matching row tiles of two arrays
+    and hands the reducer their *tile-level* join ``[A_blk | B_blk]``.
+
+    Joining per tile keeps the copy cache-resident (the joined tile is consumed
+    immediately), instead of materializing a full (n, d+k) concatenation in HBM
+    and re-reading it — one whole DRAM round trip of A saved per gram pass.
+    """
+    bs = max(1, min(block_rows, n))
+    nb = -(-n // bs)
+    if nb * bs != n:
+        A2 = jnp.pad(A2, ((0, nb * bs - n), (0, 0)))
+        B2 = jnp.pad(B2, ((0, nb * bs - n), (0, 0)))
+    Af = A2.astype(jnp.float32)
+    Bf = B2.astype(jnp.float32)
+
+    def fetch(i):
+        return jnp.concatenate(
+            [
+                jax.lax.dynamic_slice_in_dim(Af, i * bs, bs, axis=0),
+                jax.lax.dynamic_slice_in_dim(Bf, i * bs, bs, axis=0),
+            ],
+            axis=1,
+        )
+
+    if nb == 1:
+        return reducer(init, jnp.int32(0), fetch(jnp.int32(0)))
+
+    def body(carry, i):
+        acc, cur = carry
+        nxt = fetch(jnp.minimum(i + 1, nb - 1))  # prefetch: independent of the reduce
+        acc = reducer(acc, i * bs, cur)
+        return (acc, nxt), None
+
+    (acc, _), _ = jax.lax.scan(body, (init, fetch(jnp.int32(0))), jnp.arange(nb, dtype=jnp.int32))
+    return acc
+
+
+def _join_b(A: jax.Array, b: Optional[jax.Array]):
+    """Stack ``[A | b]`` so one pass sketches both; returns the joined 2-D matrix."""
+    if A.ndim != 2:
+        raise ValueError(f"gram_blocked expects A of shape (n, d), got {A.shape}")
+    if b is None:
+        return A
+    bm = b if b.ndim == 2 else b[:, None]
+    return jnp.concatenate([A, bm.astype(A.dtype)], axis=1)
+
+
+def _split_gram(Gf: jax.Array, d: int, b: Optional[jax.Array]):
+    """Carve (G, c) out of the joint Gram of [A | b]: G = (SA)ᵀ(SA), c = (SA)ᵀ(Sb)."""
+    G = Gf[:d, :d]
+    if b is None:
+        return G, None
+    c = Gf[:d, d:]
+    return G, (c[:, 0] if b.ndim == 1 else c)
 
 
 def _gather_rows_reducer(rows: jax.Array):
@@ -187,6 +275,18 @@ class SketchOp:
         out = (self.columns(0, self.n) @ A2.astype(jnp.float32)).astype(A.dtype)
         return _from_2d(out, batch)
 
+    def _stream_pieces(self, k: int):
+        """The kind's blocked-streaming triple ``(init, reducer, finish)`` for a
+        width-k right-hand side: ``acc := init``; ``acc = reducer(acc, j0, tile)``
+        over row tiles; ``S @ X = finish(acc)``. One primitive powers both
+        :meth:`apply_blocked` and the fused :meth:`gram_blocked`.
+
+        Default: dense S tiles from :meth:`columns` (Gaussian, SRHT closed form).
+        """
+        init = jnp.zeros((self.m, k), jnp.float32)
+        reducer = lambda acc, j0, Ab: acc + self.columns(j0, Ab.shape[0]) @ Ab
+        return init, reducer, lambda acc: acc
+
     def apply_blocked(
         self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
     ) -> jax.Array:
@@ -197,14 +297,9 @@ class SketchOp:
         tolerance for any ``block_rows`` (including ones that don't divide n).
         """
         A2, batch = _to_2d(A, self.n)
-        acc = _scan_row_blocks(
-            A2,
-            self.n,
-            block_rows,
-            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
-            lambda acc, j0, Ab: acc + self.columns(j0, Ab.shape[0]) @ Ab,
-        )
-        return _from_2d(acc.astype(A.dtype), batch)
+        init, reducer, finish = self._stream_pieces(A2.shape[1])
+        acc = _scan_row_blocks(A2, self.n, block_rows, init, reducer)
+        return _from_2d(finish(acc).astype(A.dtype), batch)
 
     def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
         """``Sᵀ @ Y`` for Y of shape (m, ...), streamed over column tiles of S."""
@@ -220,6 +315,37 @@ class SketchOp:
         _, outs = jax.lax.scan(body, None, j0s)
         out = outs.reshape(nb * bs, Yf.shape[1])[: self.n]
         return _from_2d(out.astype(Y.dtype), batch)
+
+    def gram_blocked(
+        self,
+        A: jax.Array,
+        b: Optional[jax.Array] = None,
+        *,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+    ):
+        """Fused single-pass sketch→Gram: ``(G, c)`` with ``G = (SA)ᵀ(SA)`` (d, d)
+        and ``c = (SA)ᵀ(Sb)`` (``None`` when b is), from ONE streamed pass over
+        ``[A | b]``.
+
+        This is everything the sketched normal equations need — the m×d problem is
+        then a Cholesky on G. The (m, d+k) sketch accumulator rides in the scan
+        carry (double-buffered row tiles, with ``[A_blk | b_blk]`` joined at tile
+        granularity so no full concatenation ever hits HBM); SA is never written
+        back for large n, and the Gram is a single tiny trailing contraction.
+        Kernel-routed kinds override this with fully fused Pallas kernels that
+        also keep S in-core.
+        """
+        if A.ndim != 2:
+            raise ValueError(f"gram_blocked expects A of shape (n, d), got {A.shape}")
+        bm = None if b is None else (b if b.ndim == 2 else b[:, None])
+        k = A.shape[1] + (0 if bm is None else bm.shape[1])
+        init, reducer, finish = self._stream_pieces(k)
+        if bm is None:
+            acc = _scan_row_blocks(A, self.n, block_rows, init, reducer)
+        else:
+            acc = _scan_row_blocks_joint(A, bm, self.n, block_rows, init, reducer)
+        SAb = finish(acc).astype(jnp.float32)
+        return _split_gram(SAb.T @ SAb, A.shape[1], b)
 
     def materialize(self, dtype=jnp.float32) -> jax.Array:
         """Explicit S ∈ R^{m×n} (tests / small problems only)."""
@@ -260,6 +386,29 @@ class GaussianOp(SketchOp):
             A2, batch = _to_2d(A, self.n)
             return _from_2d(gops.gaussian_sketch(self.key, A2, self.m), batch)
         return super().apply(A)
+
+    def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+        if self.spec.use_kernel:
+            from repro.kernels.gaussian import ops as gops
+
+            Y2, batch = _to_2d(Y, self.m)
+            out = gops.gaussian_adjoint(self.key, Y2, self.n)
+            return _from_2d(out.astype(Y.dtype), batch)
+        return super().adjoint(Y, block_rows=block_rows)
+
+    def gram_blocked(
+        self,
+        A: jax.Array,
+        b: Optional[jax.Array] = None,
+        *,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+    ):
+        if self.spec.use_kernel:
+            from repro.kernels.gaussian import ops as gops
+
+            Gf = gops.gaussian_gram(self.key, _join_b(A, b), self.m)
+            return _split_gram(Gf, A.shape[1], b)
+        return super().gram_blocked(A, b, block_rows=block_rows)
 
 
 # -------------------------------------------------------------------------- srht
@@ -323,6 +472,26 @@ class SRHTOp(SketchOp):
         out = HZ * self._signs(jnp.arange(self.n))[:, None] * jnp.float32(1.0 / math.sqrt(self.m))
         return _from_2d(out.astype(Y.dtype), batch)
 
+    def gram_blocked(
+        self,
+        A: jax.Array,
+        b: Optional[jax.Array] = None,
+        *,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+    ):
+        if self.spec.use_kernel:
+            from repro.kernels.fwht import ops as fops
+
+            key_words = jnp.stack([self.kd0, self.kd1])
+            Gf = fops.srht_gram(_join_b(A, b), self.rows, key_words)
+            return _split_gram(Gf, A.shape[1], b)
+        # Non-kernel: the transform is global, so streamed Sylvester tiles would
+        # trade the O(n log n · k) FWHT for an O(n·m·k) matmul — a big loss. One
+        # FWHT apply then the tiny (m, d+k) Gram is the fast single pass here;
+        # only the Pallas closed-form kernel makes true tile streaming pay.
+        SAb = self.apply(_join_b(A, b)).astype(jnp.float32)
+        return _split_gram(SAb.T @ SAb, A.shape[1], b)
+
 
 # ------------------------------------------------------------------ row sampling
 
@@ -356,18 +525,9 @@ class UniformOp(SketchOp):
         onehot = (self.rows[:, None] == j[None, :]).astype(jnp.float32)
         return onehot * jnp.float32(self._scale)
 
-    def apply_blocked(
-        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
-    ) -> jax.Array:
-        A2, batch = _to_2d(A, self.n)
-        acc = _scan_row_blocks(
-            A2,
-            self.n,
-            block_rows,
-            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
-            _gather_rows_reducer(self.rows),
-        )
-        return _from_2d((acc * jnp.float32(self._scale)).astype(A.dtype), batch)
+    def _stream_pieces(self, k: int):
+        init = jnp.zeros((self.m, k), jnp.float32)
+        return init, _gather_rows_reducer(self.rows), lambda acc: acc * jnp.float32(self._scale)
 
     def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
         Y2, batch = _to_2d(Y, self.m)
@@ -404,18 +564,10 @@ class LeverageOp(SketchOp):
         onehot = (self.rows[:, None] == j[None, :]).astype(jnp.float32)
         return onehot * self.scales.astype(jnp.float32)[:, None]
 
-    def apply_blocked(
-        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
-    ) -> jax.Array:
-        A2, batch = _to_2d(A, self.n)
-        acc = _scan_row_blocks(
-            A2,
-            self.n,
-            block_rows,
-            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
-            _gather_rows_reducer(self.rows),
-        )
-        return _from_2d((acc * self.scales.astype(jnp.float32)[:, None]).astype(A.dtype), batch)
+    def _stream_pieces(self, k: int):
+        init = jnp.zeros((self.m, k), jnp.float32)
+        finish = lambda acc: acc * self.scales.astype(jnp.float32)[:, None]
+        return init, _gather_rows_reducer(self.rows), finish
 
     def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
         Y2, batch = _to_2d(Y, self.m)
@@ -464,19 +616,12 @@ class SJLTOp(SketchOp):
             out = self._segment_apply(A2.astype(jnp.float32), jnp.arange(self.n)).astype(A.dtype)
         return _from_2d(out, batch)
 
-    def apply_blocked(
-        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
-    ) -> jax.Array:
-        A2, batch = _to_2d(A, self.n)
-        acc = _scan_row_blocks(
-            A2,
-            self.n,
-            block_rows,
-            jnp.zeros((self.m, A2.shape[1]), jnp.float32),
-            lambda acc, j0, Ab: acc
-            + self._segment_apply(Ab, j0 + jnp.arange(Ab.shape[0], dtype=jnp.int32)),
+    def _stream_pieces(self, k: int):
+        init = jnp.zeros((self.m, k), jnp.float32)
+        reducer = lambda acc, j0, Ab: acc + self._segment_apply(
+            Ab, j0 + jnp.arange(Ab.shape[0], dtype=jnp.int32)
         )
-        return _from_2d(acc.astype(A.dtype), batch)
+        return init, reducer, lambda acc: acc
 
     def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
         Y2, batch = _to_2d(Y, self.m)
@@ -484,6 +629,21 @@ class SJLTOp(SketchOp):
         gathered = jnp.take(Y2.astype(jnp.float32), buckets, axis=0)  # (n, s, k)
         out = jnp.sum(gathered * signs[..., None], axis=1)
         return _from_2d(out.astype(Y.dtype), batch)
+
+    def gram_blocked(
+        self,
+        A: jax.Array,
+        b: Optional[jax.Array] = None,
+        *,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+    ):
+        if self.spec.use_kernel:
+            from repro.kernels.sjlt import ops as sops
+
+            buckets, signs = self._params(jnp.arange(self.n))
+            Gf = sops.sjlt_gram(_join_b(A, b), buckets, signs, self.m)
+            return _split_gram(Gf, A.shape[1], b)
+        return super().gram_blocked(A, b, block_rows=block_rows)
 
 
 # ------------------------------------------------------------------------ hybrid
@@ -518,21 +678,12 @@ class HybridOp(SketchOp):
         sampled = jnp.take(A, self.rows, axis=0) * jnp.asarray(self._scale, A.dtype)
         return self.inner.apply(sampled)
 
-    def apply_blocked(
-        self, A: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS
-    ) -> jax.Array:
-        A2, batch = _to_2d(A, self.n)
+    def _stream_pieces(self, k: int):
         # The m′×k intermediate is exactly the "what a worker reads" budget — it is
         # the one thing hybrid sketching keeps resident while streaming over n.
-        sampled = _scan_row_blocks(
-            A2,
-            self.n,
-            block_rows,
-            jnp.zeros((self.spec.m_prime, A2.shape[1]), jnp.float32),
-            _gather_rows_reducer(self.rows),
-        )
-        out = self.inner.apply(sampled * jnp.float32(self._scale))
-        return _from_2d(out.astype(A.dtype), batch)
+        init = jnp.zeros((self.spec.m_prime, k), jnp.float32)
+        finish = lambda acc: self.inner.apply(acc * jnp.float32(self._scale))
+        return init, _gather_rows_reducer(self.rows), finish
 
     def adjoint(self, Y: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
         Y2, batch = _to_2d(Y, self.m)
@@ -571,36 +722,175 @@ def apply_blocked(
     )
 
 
+def gram_blocked(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    scores=None,
+):
+    """Fused single-pass ``(G, c) = ((SA)ᵀ(SA), (SA)ᵀ(Sb))`` — registry-dispatched."""
+    scores = _scores_for(spec, A, scores)
+    return make_operator(spec, key, A.shape[0], scores=scores).gram_blocked(
+        A, b, block_rows=block_rows
+    )
+
+
+# ------------------------------------------------------- multi-worker batching
+
+
+def _mesh_world(mesh, axis_names) -> int:
+    q = 1
+    for name in axis_names:
+        q *= mesh.shape[name]
+    return q
+
+
+def _mesh_batch_enabled() -> bool:
+    """Whether batched dispatch may shard worker keys over a provided mesh.
+
+    On real accelerator meshes each worker's sketch runs on its own chip — a q×
+    compute win. Forced host "devices" (``--xla_force_host_platform_device_count``)
+    share one CPU, so sharding there only adds SPMD partitioning overhead on top of
+    the same serial FLOPs; the loop fallback is strictly faster. Override with
+    ``REPRO_MESH_BATCH=1`` / ``0`` (tests force the mesh path on fake devices to
+    check it is bitwise-identical to the loop).
+    """
+    forced = os.environ.get("REPRO_MESH_BATCH", "").strip().lower()
+    if forced in ("1", "true", "yes"):
+        return True
+    if forced in ("0", "false", "no"):
+        return False
+    return jax.default_backend() != "cpu"
+
+
+def _batched_prefers_loop(spec: sk.SketchSpec) -> bool:
+    """Backend-aware choice between vmap and a sequential map for worker batching.
+
+    Pallas calls batch unreliably in interpret mode, and the FWHT butterfly vmaps
+    poorly off-accelerator — ``results/bench/BENCH_sketch_ops.json`` shows the
+    batched SRHT losing to a plain loop on CPU — so both take the sequential map
+    (which still reuses the single resident copy of A). Everything else vmaps the
+    q projections onto one batched matmul.
+    """
+    if spec.use_kernel:
+        return True
+    kinds = {spec.kind} | ({spec.inner} if spec.kind == "hybrid" else set())
+    return "srht" in kinds and jax.default_backend() == "cpu"
+
+
+def _batched_over_keys(per_key, keys: jax.Array, spec: sk.SketchSpec, mesh, axis_names, extras):
+    """Run ``per_key(key, *extras)`` for every worker key.
+
+    Dispatch order: ``shard_map`` over the mesh's worker axes when a mesh is given
+    and the backend has real devices to shard over (:func:`_mesh_batch_enabled`;
+    each shard runs its q/world keys sequentially — bitwise identical to the loop
+    fallback under the same keys), else the per-backend loop/vmap choice of
+    :func:`_batched_prefers_loop`.
+    """
+    if mesh is not None and _mesh_batch_enabled():
+        world = _mesh_world(mesh, axis_names)
+        if world > 1 and keys.shape[0] % world == 0:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.utils.compat import shard_map
+
+            def worker(keys_blk, *ex):
+                return jax.lax.map(lambda k: per_key(k, *ex), keys_blk)
+
+            fn = shard_map(
+                worker,
+                mesh=mesh,
+                in_specs=(P(axis_names),) + tuple(P() for _ in extras),
+                out_specs=P(axis_names),
+            )
+            return fn(keys, *extras)
+    if _batched_prefers_loop(spec):
+        return jax.lax.map(lambda k: per_key(k, *extras), keys)
+    return jax.vmap(lambda k: per_key(k, *extras))(keys)
+
+
 def apply_batched(
-    spec: sk.SketchSpec, keys: jax.Array, A: jax.Array, *, scores=None
+    spec: sk.SketchSpec,
+    keys: jax.Array,
+    A: jax.Array,
+    *,
+    scores=None,
+    mesh=None,
+    axis_names: tuple = ("workers",),
 ) -> jax.Array:
     """All ``q`` workers' sketches ``(S_k A)_k`` in one pass over A.
 
-    ``keys``: (q,)-batched PRNG keys (e.g. ``prng.worker_keys``). vmapping the
-    per-key operator means A is read once and the q projections batch onto the
-    MXU, instead of q separate passes. Data-dependent statistics (leverage
-    scores) are computed once and shared — each worker still draws its own rows.
+    ``keys``: (q,)-batched PRNG keys (e.g. ``prng.worker_keys``). The q projections
+    are either vmapped onto one batched matmul, run as a sequential map (auto-chosen
+    per backend — see :func:`_batched_prefers_loop`), or — when ``mesh`` is given
+    and q divides the worker-axis world size — sharded across the mesh with one
+    replicated read of A per device. Data-dependent statistics (leverage scores)
+    are computed once and shared — each worker still draws its own rows.
     Returns a (q, m, ...) stack.
     """
     scores = _scores_for(spec, A, scores)
+    n = A.shape[0]
+    extras = (A,) + ((scores,) if scores is not None else ())
 
-    def one(k):
-        return make_operator(spec, k, A.shape[0], scores=scores).apply(A)
+    def per_key(k, A_, *rest):
+        return make_operator(spec, k, n, scores=rest[0] if rest else None).apply(A_)
 
-    if spec.use_kernel:
-        # pallas_call batching in interpret mode is unreliable; sequential map still
-        # reuses the single resident copy of A.
-        return jax.lax.map(one, keys)
-    return jax.vmap(one)(keys)
+    return _batched_over_keys(per_key, keys, spec, mesh, axis_names, extras)
+
+
+def gram_batched(
+    spec: sk.SketchSpec,
+    keys: jax.Array,
+    A: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    scores=None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    mesh=None,
+    axis_names: tuple = ("workers",),
+):
+    """All ``q`` workers' fused Grams ``(G_k, c_k)`` — the batched form of
+    :meth:`SketchOp.gram_blocked`.
+
+    Per worker this moves O(d²) instead of O(m·d) out of the sketch pass (and for
+    the fused kernels, nothing of S or SA ever reaches HBM), which is what the
+    master-sketch privacy mode ships and what IHS/head-fitting consume. Returns
+    ``(Gs, cs)`` of shapes (q, d, d) and (q, d[, k]); ``cs`` is None when b is.
+    """
+    scores = _scores_for(spec, A, scores)
+    n = A.shape[0]
+    extras = (A,) + (() if b is None else (b,)) + ((scores,) if scores is not None else ())
+
+    def per_key(k, A_, *rest):
+        rest = list(rest)
+        b_ = rest.pop(0) if b is not None else None
+        sc = rest.pop(0) if scores is not None else None
+        op = make_operator(spec, k, n, scores=sc)
+        G, c = op.gram_blocked(A_, b_, block_rows=block_rows)
+        return (G, c) if b is not None else G
+
+    out = _batched_over_keys(per_key, keys, spec, mesh, axis_names, extras)
+    return out if b is not None else (out, None)
 
 
 def sketch_data_batched(
-    spec: sk.SketchSpec, keys: jax.Array, A: jax.Array, b: jax.Array
+    spec: sk.SketchSpec,
+    keys: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    mesh=None,
+    axis_names: tuple = ("workers",),
 ) -> tuple:
     """Batched Algorithm-1 master step: ``(S_k A, S_k b)`` for every worker key,
     sketching ``[A | b]`` jointly so each worker's pair shares its S."""
     bm = b if b.ndim == 2 else b[:, None]
     d = A.shape[1]
-    SAb = apply_batched(spec, keys, jnp.concatenate([A, bm], axis=1))
+    SAb = apply_batched(
+        spec, keys, jnp.concatenate([A, bm], axis=1), mesh=mesh, axis_names=axis_names
+    )
     Sb = SAb[..., d:]
     return SAb[..., :d], (Sb if b.ndim == 2 else Sb[..., 0])

@@ -67,6 +67,18 @@ def _cg_normal(A: jax.Array, b: jax.Array, *, reg: float = 0.0, iters: int = 64)
     return x
 
 
+def lstsq_gram(G: jax.Array, c: jax.Array, *, reg: float = 0.0) -> jax.Array:
+    """Solve ``(G + reg·I) x = c`` by Cholesky — the tiny d×d tail of the fused path.
+
+    ``(G, c) = ((SA)ᵀ(SA), (SA)ᵀ(Sb))`` come out of one streamed sketch→Gram pass
+    (:meth:`repro.core.operators.SketchOp.gram_blocked`); nothing here ever sees SA.
+    """
+    d = G.shape[0]
+    L = jnp.linalg.cholesky(G + reg * jnp.eye(d, dtype=G.dtype))
+    y = jax.scipy.linalg.solve_triangular(L, c, lower=True)
+    return jax.scipy.linalg.solve_triangular(L.T, y, lower=False)
+
+
 def least_norm(A: jax.Array, b: jax.Array) -> jax.Array:
     """min ‖x‖² s.t. Ax = b (n < d, full row rank): x = Aᵀ(AAᵀ)⁻¹b."""
     G = A @ A.T
@@ -86,10 +98,21 @@ def sketch_and_solve(
     b: jax.Array,
     *,
     reg: float = 0.0,
-    method: str = "qr",
+    method: str = "fused",
+    block_rows: int = operators.DEFAULT_BLOCK_ROWS,
 ) -> jax.Array:
     """One worker of Algorithm 1 (left sketch, n > d):
-    x̂ = argmin_x ‖S(Ax − b)‖² with S ~ spec."""
+    x̂ = argmin_x ‖S(Ax − b)‖² with S ~ spec.
+
+    ``method="fused"`` (default) takes the single-pass sketch→Gram fast path:
+    ``(G, c)`` accumulate in one streamed pass over ``[A | b]`` — SA is never
+    materialized — and the solve is a d×d Cholesky. The two-pass paths
+    (``"qr"``/``"chol"``/``"cg"``: materialize (SA, Sb), then factorize) are
+    retained as the reference oracle.
+    """
+    if method == "fused":
+        G, c = operators.gram_blocked(spec, key, A, b, block_rows=block_rows)
+        return lstsq_gram(G, c, reg=reg)
     SA, Sb = sk.sketch_data(spec, key, A, b)
     return lstsq(SA, Sb, reg=reg, method=method)
 

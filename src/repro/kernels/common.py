@@ -8,12 +8,39 @@ reproduce identical sketches with zero coordination.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 _ROT = (13, 15, 26, 6, 17, 29, 16, 24)
 _PARITY = np.uint32(0x1BD11BDA)
+
+
+# ------------------------------------------------------------- interpret default
+
+
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode on this backend.
+
+    Mosaic lowering only exists for TPU; on CPU (tests, this container) and GPU the
+    kernels must run interpreted. Every public kernel op takes ``interpret=None``
+    meaning "resolve here", so compiled-vs-interpreted is decided in exactly one
+    place instead of hard-coded per call site. ``REPRO_PALLAS_INTERPRET=0/1``
+    overrides the autodetection (e.g. to force-interpret on TPU while debugging).
+    """
+    forced = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if forced in ("1", "true", "yes"):
+        return True
+    if forced in ("0", "false", "no"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> backend autodetection; anything else is an explicit override."""
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def _rotl(x: jax.Array, r: int) -> jax.Array:

@@ -11,11 +11,13 @@ are exactly the pass-1 tiles.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
+from repro.kernels.fwht import gram as K_gram
 from repro.kernels.fwht import kernel as K
 
 MAX_TILE_ROWS = 4096  # 4096×256 f32 tile = 4 MiB — well inside a v5e core's ~16 MiB more VMEM
@@ -29,8 +31,9 @@ def _hadamard_factors(rows: int, dtype):
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def fwht(x: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True) -> jax.Array:
+def fwht(x: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool | None = None) -> jax.Array:
     """Unnormalized Walsh-Hadamard transform along axis 0 of x: (n, d), n pow2."""
+    interpret = common.resolve_interpret(interpret)
     orig_ndim = x.ndim
     if x.ndim == 1:
         x = x[:, None]
@@ -59,6 +62,38 @@ def fwht(x: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True
         y = y2.reshape(n, d_pad)
 
     return y[:, :d].astype(dtype) if orig_ndim == 2 else y[:, 0].astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def srht_gram(
+    A: jax.Array, rows: jax.Array, key_words: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """G = (SA)ᵀ(SA) for the SRHT in one fused streamed pass (no FWHT, no SA in HBM).
+
+    ``A``: (n, d) *already sign-flipped is NOT expected* — the Rademacher diagonal D
+    keyed by ``key_words`` is applied inside the kernel via the Sylvester closed form.
+    ``rows``: (m,) sampled Hadamard row ids. Returns (d, d) f32.
+    """
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+    m = rows.shape[0]
+    bn = min(MAX_TILE_ROWS, common.round_up(n, 8))
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    rows_p = (common.pad_axis_to(rows.astype(jnp.int32) + 1, 0, m_pad) - 1).reshape(m_pad, 1)
+
+    G = K_gram.srht_gram_tiles(
+        Af,
+        rows_p,
+        key_words,
+        block_n=bn,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    return G[:d, :d]
 
 
 def flops_and_bytes(n: int, d: int) -> dict:

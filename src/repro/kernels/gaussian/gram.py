@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused Gaussian sketch→Gram — G = (SA)ᵀ(SA) in ONE pass over A.
+
+The sketch-and-solve hot loop only ever consumes ``SA`` through its Gram matrix
+``G = (SA)ᵀ(SA)`` and right-hand side ``c = (SA)ᵀ(Sb)`` (the m×d problem is solved by
+Cholesky on G). Materializing SA first means a full HBM round-trip of an (m, d) array
+per worker plus a second kernel launch for the Gram; materializing S itself is O(m·n)
+bytes of pure reproducible noise.
+
+This kernel does the whole chain in one streamed pass: the grid walks row tiles of A,
+each (m, block_n) tile of S is generated in VMEM from the counter RNG (same stream as
+``GaussianOp.columns`` / the apply kernel), contracted with the A tile on the MXU into
+an (m, d) VMEM scratch accumulator — scratch persists across the sequential TPU grid —
+and only at the final grid step is the tiny (d, d) Gram contraction formed and written
+out. HBM traffic: read A once, write d² floats. S and SA never exist in HBM.
+
+Sketching ``[A | b]`` jointly yields G and c from the same pass (callers slice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def gaussian_gram_tiles(
+    A: jax.Array,
+    key_words: jax.Array,
+    m: int,
+    m_pad: int,
+    *,
+    block_n: int,
+    inv_sqrt_m: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """G = (SA)ᵀ(SA) with S ~ N(0, 1/m) generated in-core. A: (n_pad, d_pad), both
+    padded dims zero-filled; returns (d_pad, d_pad) f32. Rows of S beyond ``m``
+    (padding to the sublane multiple) are masked to zero so they never enter G."""
+    n, d = A.shape
+    n_tiles = n // block_n
+
+    def kernel(kw_ref, a_ref, o_ref, acc_ref):
+        ni = pl.program_id(0)
+
+        @pl.when(ni == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        k0 = kw_ref[0]
+        k1 = kw_ref[1]
+        rows = jax.lax.broadcasted_iota(jnp.uint32, (m_pad, block_n), 0)
+        cols = (ni * block_n).astype(jnp.uint32) + jax.lax.broadcasted_iota(
+            jnp.uint32, (m_pad, block_n), 1
+        )
+        s_tile = common.counter_normal(k0, k1, rows, cols) * jnp.float32(inv_sqrt_m)
+        s_tile = jnp.where(rows < jnp.uint32(m), s_tile, 0.0)
+        acc_ref[...] += jnp.dot(s_tile, a_ref[...], preferred_element_type=jnp.float32)
+
+        @pl.when(ni == n_tiles - 1)
+        def _finish():
+            acc = acc_ref[...]
+            o_ref[...] = jax.lax.dot_general(
+                acc, acc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda ni: (0,)),
+            pl.BlockSpec((block_n, d), lambda ni: (ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda ni: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m_pad, d), jnp.float32)],
+        interpret=interpret,
+    )(key_words, A)
+
+
+def gaussian_adjoint_tiles(
+    Y: jax.Array,
+    key_words: jax.Array,
+    n_pad: int,
+    *,
+    block_n: int,
+    block_m: int,
+    block_k: int,
+    inv_sqrt_m: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """out = Sᵀ @ Y with S generated in-core (the missing Gaussian adjoint kernel).
+
+    Y: (m_pad, k_pad), zero-padded below the true m so padded sketch rows contribute
+    nothing. Grid (n_tiles, k_tiles, m_tiles) with m innermost: the (block_n, block_k)
+    output tile is revisited and accumulated across m steps, exactly mirroring the
+    forward kernel's n-accumulation. S tiles use the same (key, i, j) counter stream
+    as the forward pass, so adjoint(apply(x)) sees one consistent S.
+    """
+    m, k = Y.shape
+    grid = (n_pad // block_n, k // block_k, m // block_m)
+
+    def kernel(kw_ref, y_ref, o_ref):
+        ni = pl.program_id(0)
+        mi = pl.program_id(2)
+
+        @pl.when(mi == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        k0 = kw_ref[0]
+        k1 = kw_ref[1]
+        rows = (mi * block_m).astype(jnp.uint32) + jax.lax.broadcasted_iota(
+            jnp.uint32, (block_m, block_n), 0
+        )
+        cols = (ni * block_n).astype(jnp.uint32) + jax.lax.broadcasted_iota(
+            jnp.uint32, (block_m, block_n), 1
+        )
+        s_tile = common.counter_normal(k0, k1, rows, cols) * jnp.float32(inv_sqrt_m)
+        contrib = jax.lax.dot_general(
+            s_tile, y_ref[...], (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        o_ref[...] += contrib
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda ni, ki, mi: (0,)),
+            pl.BlockSpec((block_m, block_k), lambda ni, ki, mi: (mi, ki)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_k), lambda ni, ki, mi: (ni, ki)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+        interpret=interpret,
+    )(key_words, Y)

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
+from repro.kernels.gaussian import gram as K_gram
 from repro.kernels.gaussian import kernel as K
 
 BLOCK_M = 256
@@ -16,8 +17,9 @@ BLOCK_D = 256
 
 
 @functools.partial(jax.jit, static_argnames=("m", "interpret"))
-def gaussian_sketch(key: jax.Array, A: jax.Array, m: int, *, interpret: bool = True) -> jax.Array:
+def gaussian_sketch(key: jax.Array, A: jax.Array, m: int, *, interpret: bool | None = None) -> jax.Array:
     """S @ A with S ~ N(0, 1/m)^{m×n} generated inside the kernel. A: (n, d)."""
+    interpret = common.resolve_interpret(interpret)
     orig_ndim = A.ndim
     if A.ndim == 1:
         A = A[:, None]
@@ -47,6 +49,71 @@ def gaussian_sketch(key: jax.Array, A: jax.Array, m: int, *, interpret: bool = T
         interpret=interpret,
     )
     out = out[:m, :d].astype(dtype)
+    return out[:, 0] if orig_ndim == 1 else out
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def gaussian_gram(key: jax.Array, A: jax.Array, m: int, *, interpret: bool | None = None) -> jax.Array:
+    """G = (SA)ᵀ(SA) ∈ R^{d×d} in one fused pass — S and SA never touch HBM.
+
+    Pass ``A = [data | b]`` to get the Gram and right-hand side of the sketched
+    normal equations from a single streaming of the data (callers slice G and c).
+    """
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+    bn = min(BLOCK_N, common.round_up(n, 8))
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    k0, k1 = common.key_to_words(key)
+    key_words = jnp.stack([k0, k1])
+
+    G = K_gram.gaussian_gram_tiles(
+        Af,
+        key_words,
+        m,
+        m_pad,
+        block_n=bn,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    return G[:d, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def gaussian_adjoint(key: jax.Array, Y: jax.Array, n: int, *, interpret: bool | None = None) -> jax.Array:
+    """Sᵀ @ Y with S ~ N(0, 1/m)^{m×n} regenerated in-core. Y: (m, k) or (m,)."""
+    interpret = common.resolve_interpret(interpret)
+    orig_ndim = Y.ndim
+    if Y.ndim == 1:
+        Y = Y[:, None]
+    m, k = Y.shape
+    dtype = Y.dtype
+
+    bm = min(BLOCK_M, common.round_up(m, 8))
+    bn = min(BLOCK_N, common.round_up(n, 8))
+    bk = min(BLOCK_D, common.round_up(k, 128))
+    m_pad = common.round_up(m, bm)
+    n_pad = common.round_up(n, bn)
+    k_pad = common.round_up(k, bk)
+
+    Yf = common.pad_axis_to(common.pad_axis_to(Y.astype(jnp.float32), 0, m_pad), 1, k_pad)
+    k0, k1 = common.key_to_words(key)
+    key_words = jnp.stack([k0, k1])
+
+    out = K_gram.gaussian_adjoint_tiles(
+        Yf,
+        key_words,
+        n_pad,
+        block_n=bn,
+        block_m=bm,
+        block_k=bk,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    out = out[:n, :k].astype(dtype)
     return out[:, 0] if orig_ndim == 1 else out
 
 

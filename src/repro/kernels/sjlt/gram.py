@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused SJLT sketch→Gram — G = (SA)ᵀ(SA) in ONE pass over A.
+
+Same single-pass structure as the Gaussian gram kernel (grid over row tiles of A, an
+(m, d) VMEM scratch accumulator that persists across the sequential grid, Gram formed
+once at the final step), but the S tile is the SJLT one-hot slice built in registers
+from the counter-derived bucket/sign parameters — the identical construction the
+apply kernel uses, so the fused Gram is the Gram of exactly that sketch.
+
+Per n-tile:  acc += one_hot(bucketsᵀ) · (signs ⊙ A-replicated)   (scatter as matmul)
+Final step:  G = accᵀ · acc
+
+Padded input rows are routed to bucket −1 by the caller (no local column matches) and
+carry zero signs, so they contribute nothing; accumulator rows beyond the true m are
+never addressed because bucket ids live in [0, m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def sjlt_gram_tiles(
+    A: jax.Array,
+    buckets: jax.Array,
+    signs: jax.Array,
+    m_pad: int,
+    *,
+    block_n: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """G = (SA)ᵀ(SA) for the SJLT defined by (buckets, signs). A: (n_pad, d_pad);
+    buckets/signs: (n_pad, s). Returns (d_pad, d_pad) f32."""
+    n, d = A.shape
+    s = buckets.shape[1]
+    n_tiles = n // block_n
+
+    def kernel(b_ref, s_ref, a_ref, o_ref, acc_ref):
+        ni = pl.program_id(0)
+
+        @pl.when(ni == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        buckets_blk = b_ref[...]
+        signs_blk = s_ref[...]
+        a = a_ref[...]
+        nb, ss = buckets_blk.shape
+        cols = jax.lax.broadcasted_iota(jnp.int32, (nb * ss, m_pad), 1)
+        flat = buckets_blk.reshape(nb * ss, 1)
+        onehot = jnp.where(cols == flat, signs_blk.reshape(nb * ss, 1), 0.0).astype(a.dtype)
+        a_rep = jnp.repeat(a, ss, axis=0)
+        acc_ref[...] += jax.lax.dot_general(
+            onehot, a_rep, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+        @pl.when(ni == n_tiles - 1)
+        def _finish():
+            acc = acc_ref[...]
+            o_ref[...] = jax.lax.dot_general(
+                acc, acc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((block_n, s), lambda ni: (ni, 0)),
+            pl.BlockSpec((block_n, s), lambda ni: (ni, 0)),
+            pl.BlockSpec((block_n, d), lambda ni: (ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda ni: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m_pad, d), jnp.float32)],
+        interpret=interpret,
+    )(buckets, signs, A)

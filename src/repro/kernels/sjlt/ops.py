@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
+from repro.kernels.sjlt import gram as K_gram
 from repro.kernels.sjlt import kernel as K
 from repro.kernels.sjlt import ref as R
 
@@ -34,10 +35,11 @@ def sjlt_apply(
     signs: jax.Array,
     m: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
     """S @ A for the SJLT defined by (buckets, signs). A: (n, d) -> (m, d)."""
+    interpret = common.resolve_interpret(interpret)
     if use_ref:
         return R.sjlt_apply(A, buckets, signs, m)
     n, d = A.shape
@@ -63,8 +65,38 @@ def sjlt_apply(
     return out[:m, :d].astype(dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def sjlt_gram(
+    A: jax.Array,
+    buckets: jax.Array,
+    signs: jax.Array,
+    m: int,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """G = (SA)ᵀ(SA) ∈ R^{d×d} in one fused pass over A (SA never hits HBM)."""
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+    s = buckets.shape[1]
+
+    bn = min(BLOCK_N, common.round_up(n, 8))
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    # Padded (fictitious) rows: bucket -1 matches no accumulator column, sign 0.
+    buckets_p = common.pad_axis_to(buckets + 1, 0, n_pad) - 1
+    signs_p = common.pad_axis_to(signs.astype(jnp.float32), 0, n_pad)
+
+    G = K_gram.sjlt_gram_tiles(
+        Af, buckets_p, signs_p, m_pad, block_n=bn, interpret=interpret
+    )
+    return G[:d, :d]
+
+
 def sjlt_sketch(
-    key: jax.Array, A: jax.Array, m: int, *, s: int = 4, interpret: bool = True
+    key: jax.Array, A: jax.Array, m: int, *, s: int = 4, interpret: bool | None = None
 ) -> jax.Array:
     """Draw SJLT params from ``key`` and apply via the kernel."""
     buckets, signs = sjlt_params(key, A.shape[0], s, m, dtype=jnp.float32)

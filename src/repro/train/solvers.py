@@ -49,12 +49,12 @@ def fit_head(
         for w in range(q):
             accountant.record(spec.m, n, gamma=gamma, tag=f"head-fit worker {w}")
 
-    # All q workers' sketches in one batched pass over the feature matrix (the
-    # master-sketch pattern): H is read once, the q projections batch on the MXU.
+    # All q workers' Grams in one fused batched pass over the feature matrix (the
+    # master-sketch pattern): H is read once, S_kH never materialized — each worker
+    # solve is then a d×d Cholesky on its (G_k, c_k).
     keys = prng.worker_keys(key, q)
-    SHs = operators.apply_batched(spec, keys, jnp.concatenate([H, Y.reshape(n, -1)], axis=1))
-    d = H.shape[1]
-    Ws = jax.vmap(lambda SH: solve.lstsq(SH[:, :d], SH[:, d:], reg=reg))(SHs)  # (q, d, k)
+    Gs, cs = operators.gram_batched(spec, keys, H, Y.reshape(n, -1))  # (q,d,d), (q,d,k)
+    Ws = jax.vmap(lambda G, c: solve.lstsq_gram(G, c, reg=reg))(Gs, cs)  # (q, d, k)
     W = averaging.masked_average(Ws, straggler_mask)
     return W.reshape(H.shape[1:] + Y.shape[1:]) if Y.ndim > 1 else W[:, 0]
 

@@ -4,10 +4,20 @@
 # Forces 8 fake host devices so tests/test_multidevice.py exercises a real
 # 8-device mesh on CPU (its subprocesses set the same flag for themselves; this
 # makes the main process match, so mesh-building code paths see q > 1 too).
+#
+#   ./test.sh                 run the tier-1 pytest suite
+#   ./test.sh --bench-smoke   run every benchmark at one tiny shape (kernel /
+#                             perf-path regressions fail loudly here instead of
+#                             only showing up in the JSON summaries)
 set -euo pipefail
 cd "$(dirname "$0")"
 
 export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    shift
+    exec python -m benchmarks.run --smoke "$@"
+fi
 
 exec python -m pytest -x -q "$@"
