@@ -24,6 +24,7 @@ from benchmarks import (
     ihs_baseline,
     kernel_bench,
     privacy_bound,
+    runtime_bench,
     sketch_dp_ablation,
     sketch_ops_bench,
     thm1_validation,
@@ -43,6 +44,7 @@ MODULES = {
     "kernels": kernel_bench,
     "sketch_ops": sketch_ops_bench,
     "fused": fused_solve_bench,
+    "runtime": runtime_bench,
 }
 
 

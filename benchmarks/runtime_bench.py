@@ -1,0 +1,164 @@
+"""Async runtime engine: error-vs-wallclock and effective q′ under each LatencyModel.
+
+Writes ``results/bench/BENCH_runtime.json`` (plus a CSV row per model) recording,
+for one synthetic regression problem:
+
+  1. the error-vs-simulated-wallclock trace of the streaming average (the paper's
+     Fig. 1 x-axis, with the latency distribution injected instead of measured),
+     the realized q′, retry/timeout counts and latency percentiles per model;
+  2. the early-stopping claim: under the straggler-heavy (heavy-tail) model with a
+     configured ``target_error``, the master halts with the target met while a
+     demonstrable fraction of tasks is still outstanding (``stopped_early`` +
+     ``completed < submitted`` in the JSON);
+  3. determinism: the same seed replays the identical event log (hash recorded).
+
+Smoke mode (``benchmarks.run --smoke`` / ``test.sh --bench-smoke``) shrinks the
+problem so the whole sweep is CI-sized.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, print_table, smoke, write_csv
+from repro import runtime as rt
+from repro.core import sketches as sk, solve
+
+
+def _problem(n, d):
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, d))
+    x_true = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    b = A @ x_true + 0.5 * jax.random.normal(jax.random.PRNGKey(2), (n,))
+    x_star = solve.lstsq(A, b)
+    f_star = float(solve.residual_cost(A, b, x_star))
+    return key, A, b, f_star
+
+
+def _true_error_fn(A, b, f_star):
+    """(f(x̄) − f*)/f* on the *full* problem — the benchmark knows the truth."""
+
+    @jax.jit
+    def _cost(x):
+        return solve.residual_cost(A, b, x)
+
+    def err(xbar, _count):
+        return (float(_cost(jnp.asarray(xbar, A.dtype))) - f_star) / f_star
+
+    return err
+
+
+def _models(seed: int):
+    return {
+        "lognormal": rt.LognormalLatency(seed=seed, mean_s=1.0, sigma=0.35),
+        "heavytail": rt.HeavyTailLatency(seed=seed, scale_s=0.7, alpha=1.3),
+        "harddrop": rt.DropLatency(
+            seed=seed,
+            inner=rt.LognormalLatency(seed=seed, mean_s=1.0, sigma=0.35),
+            drop_prob=0.25,
+        ),
+    }
+
+
+def run(quick: bool = True):
+    if smoke():
+        n, d, m, q = 1024, 16, 128, 8
+    else:
+        n, d, m, q = (16384, 64, 512, 32) if quick else (65536, 128, 1024, 64)
+    key, A, b, f_star = _problem(n, d)
+    spec = sk.SketchSpec("gaussian", m)
+    err_fn = _true_error_fn(A, b, f_star)
+    cfg = rt.RuntimeConfig(deadline_s=2.0, max_retries=2, backoff_base_s=0.1)
+
+    rows, traces = [], {}
+    for name, model in _models(seed=5).items():
+        res = rt.serverless_sketch_solve(
+            spec, key, A, b, q=q, latency=model, config=cfg, error_fn=err_fn
+        )
+        # determinism: replay and hash both event logs
+        res2 = rt.serverless_sketch_solve(
+            spec, key, A, b, q=q, latency=model, config=cfg, error_fn=err_fn
+        )
+        log_a = "\n".join(res.events.lines())
+        log_b = "\n".join(res2.events.lines())
+        s = res.summary(deadline=cfg.deadline_s)
+        rows.append(
+            {
+                "model": name,
+                "q": q,
+                "effective_q": s["effective_q"],
+                "retries": s["retries"],
+                "timeouts": s["timeouts"],
+                "p50_latency_s": s.get("p50_latency_s", float("nan")),
+                "p95_latency_s": s.get("p95_latency_s", float("nan")),
+                "sim_makespan_s": s["sim_makespan_s"],
+                "final_rel_err": res.final_error,
+                "replay_identical": log_a == log_b,
+            }
+        )
+        traces[name] = {
+            "error_trace": [
+                {"t": t, "count": c, "rel_err": e} for t, c, e in res.events.error_trace()
+            ],
+            "summary": s,
+            "event_log_sha256": hashlib.sha256(log_a.encode()).hexdigest(),
+        }
+
+    # ---- early stopping under the straggler-heavy config: the master halts with
+    # the target met while tasks are still outstanding (never waits for the tail)
+    single = d / (m - d - 1)  # Lemma 1
+    target = single / max(2, q // 4)  # reachable well before all q arrive
+    es_cfg = rt.RuntimeConfig(
+        deadline_s=4.0, max_retries=2, backoff_base_s=0.1, target_error=target,
+        min_results=2,
+    )
+    es = rt.serverless_sketch_solve(
+        spec, key, A, b, q=q, latency=_models(seed=5)["heavytail"], config=es_cfg,
+        error_fn=err_fn,
+    )
+    early = {
+        "latency_model": "heavytail",
+        "target_error": target,
+        "final_error": es.final_error,
+        "stopped_early": es.stopped_early,
+        "submitted": es.submitted,
+        "completed": es.count,
+        "cancelled": es.events.counts().get("cancel", 0),
+        "sim_makespan_s": es.summary()["sim_makespan_s"],
+        "within_target": (es.final_error is not None and es.final_error <= target),
+    }
+
+    summary = {
+        "backend": jax.default_backend(),
+        "problem": {"n": n, "d": d, "m": m, "q": q, "kind": spec.kind},
+        "deadline_s": cfg.deadline_s,
+        "models": traces,
+        "rows": rows,
+        "early_stop": early,
+    }
+    write_csv("runtime_bench", rows)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    json_path = os.path.join(RESULTS_DIR, "BENCH_runtime.json")
+    with open(json_path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print_table("async runtime: effective q' / retries / error under latency models", rows)
+    print(f"JSON summary: {json_path}")
+
+    ok_replay = all(r["replay_identical"] for r in rows)
+    print(("PASS" if ok_replay else "FAIL") + ": deterministic replay (same seed ⇒ same event log)")
+    if early["stopped_early"] and early["within_target"] and early["completed"] < early["submitted"]:
+        print(
+            f"PASS: early stop at q'={early['completed']}/{early['submitted']} "
+            f"(rel_err {early['final_error']:.4g} <= target {target:.4g}, "
+            f"{early['cancelled']} tasks cancelled in flight)"
+        )
+    else:
+        print(f"WARN: early stopping did not trigger as configured — see {json_path}")
+    if not ok_replay:
+        raise AssertionError("runtime event logs diverged across replays")
+    return rows

@@ -58,6 +58,12 @@ def main():
     acc_avg = averaging.StreamingAverage.init(args.d)
     for r in range(rounds):
         round_mask = mask[r * n_dev : (r + 1) * n_dev]
+        if int(round_mask.sum()) == 0:
+            # every worker of this wave straggled: there is nothing to average
+            # (the eager driver raises on an empty round) — the master just moves
+            # on to the next wave, exactly like the serverless deployment.
+            print(f"round {r}: all workers straggled, skipping")
+            continue
         xbar_r = distributed.distributed_sketch_solve(
             mesh, spec, key, A, b, straggler_mask=round_mask, round_id=r
         )

@@ -30,28 +30,52 @@ def worker_index(axis_names) -> jax.Array:
     return idx
 
 
-def masked_average(xs: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+def _guard_empty(avg: jax.Array, den: jax.Array, on_empty: str) -> jax.Array:
+    """Define x̄ when *no* worker made the deadline (den == 0).
+
+    ``"nan"`` (default): NaN-poison the average — an all-straggler round has no
+    estimator (Algorithm 1's q′ = 0), and silently returning 0 used to masquerade
+    as a perfectly converged solution downstream. ``"zero"`` restores the legacy
+    x̄ = 0 for callers that treat an empty round as a no-op contribution.
+    """
+    if on_empty == "zero":
+        return avg
+    if on_empty == "nan":
+        return jnp.where(den > 0, avg, jnp.nan)
+    raise ValueError(f"on_empty must be 'nan' or 'zero', got {on_empty!r}")
+
+
+def masked_average(
+    xs: jax.Array, mask: Optional[jax.Array] = None, *, on_empty: str = "nan"
+) -> jax.Array:
     """Mean over axis 0 of xs (q, ...), counting only mask==1 rows.
 
     With mask=None this is the plain Algorithm-1 average. xs may have any rank
     (multi-output solutions stack as (q, d, k)): the mask broadcasts on axis 0.
+    An all-zero mask yields NaN by default (``on_empty`` — see :func:`_guard_empty`).
     """
     if mask is None:
         return jnp.mean(xs, axis=0)
     m = mask.astype(xs.dtype).reshape((xs.shape[0],) + (1,) * (xs.ndim - 1))
-    denom = jnp.maximum(jnp.sum(mask.astype(xs.dtype)), 1.0)
-    return jnp.sum(xs * m, axis=0) / denom
+    den = jnp.sum(mask.astype(xs.dtype))
+    avg = jnp.sum(xs * m, axis=0) / jnp.maximum(den, 1.0)
+    return _guard_empty(avg, den, on_empty)
 
 
-def psum_average(x_local: jax.Array, mask_local: jax.Array, axis_name) -> jax.Array:
-    """Straggler-resilient average across a mesh axis (inside shard_map).
+def psum_average(
+    x_local: jax.Array, mask_local: jax.Array, axis_name, *, on_empty: str = "nan"
+) -> jax.Array:
+    """Straggler-resilient average across one or more mesh axes (inside shard_map).
 
     Workers that missed the deadline pass mask_local=0; their x_local is ignored and
-    the denominator is the realized worker count.
+    the denominator is the realized worker count. When *every* worker missed, the
+    result follows ``on_empty`` (NaN-poison by default — see :func:`_guard_empty`;
+    eager drivers in ``core.distributed`` raise before tracing instead).
     """
     num = jax.lax.psum(x_local * mask_local, axis_name)
     den = jax.lax.psum(mask_local, axis_name)
-    return num / jnp.maximum(den, 1.0)
+    avg = num / jnp.maximum(den, 1.0)
+    return _guard_empty(avg, den, on_empty)
 
 
 @dataclasses.dataclass

@@ -6,7 +6,11 @@ guarantees over to the stateful parts of the framework:
 
   * ``StragglerPolicy``    — deadline-based masks for any psum-averaged quantity
     (sketched solutions, DP gradients). Pure simulation on CPU; on a real deployment
-    the mask would come from a per-step heartbeat.
+    the mask would come from a per-step heartbeat. Policies adapt onto the runtime
+    engine's latency layer via :meth:`StragglerPolicy.to_latency_model` — the async
+    engine (``repro.runtime``) consumes ``LatencyModel``s, so one straggler
+    description drives both the synchronous mask simulation and the event-driven
+    execution.
   * ``elastic_restore``    — restore any checkpoint onto any mesh: leaves are stored
     as global arrays, so q (and the mesh shape) may change between runs. Combined
     with deterministic data (pure function of step) a rescaled job continues the
@@ -46,31 +50,72 @@ class StragglerPolicy:
             key, q, drop_prob=self.drop_prob, deadline_quantile=self.deadline_quantile
         )
 
+    def to_latency_model(self, *, mean_s: float = 1.0, sigma: float = 0.35):
+        """The equivalent :class:`repro.runtime.latency.LatencyModel`: lognormal
+        runtimes (median ``mean_s``) with ``drop_prob`` hard failures layered on.
+        Feed :meth:`deadline_for` to the engine to reproduce ``deadline_quantile``
+        as a wall-clock cutoff instead of an order statistic."""
+        from repro.runtime.latency import DropLatency, LognormalLatency
+
+        inner = LognormalLatency(seed=self.seed, mean_s=mean_s, sigma=sigma)
+        return DropLatency(seed=self.seed, inner=inner, drop_prob=self.drop_prob)
+
+    def deadline_for(self, *, mean_s: float = 1.0, sigma: float = 0.35) -> float:
+        """The latency cutoff at which a lognormal wave keeps ~``deadline_quantile``
+        of its workers (math.inf when the policy keeps everyone)."""
+        import math
+
+        if self.deadline_quantile >= 1.0:
+            return math.inf
+        from repro.runtime.latency import LognormalLatency
+
+        return LognormalLatency(mean_s=mean_s, sigma=sigma).quantile(self.deadline_quantile)
+
 
 class HeartbeatMonitor:
-    """Tracks simulated worker arrival times; produces masks + reports."""
+    """Tracks simulated worker arrival times; produces masks + reports.
+
+    The runtime engine's telemetry subsumes this report
+    (``EventLog.heartbeat_report`` replays an engine run into a monitor), so the
+    schema here — including the p50 / timeout / retry extensions — is the one
+    summary format shared by synchronous trainer steps and async engine runs.
+    """
 
     def __init__(self, q: int, *, deadline: float):
         self.q = q
         self.deadline = deadline
         self.arrivals: List[np.ndarray] = []
+        self.timeouts = 0
+        self.retries = 0
 
     def record_step(self, runtimes: np.ndarray) -> np.ndarray:
         """runtimes: (q,) seconds. Returns the 0/1 mask of on-time workers."""
         self.arrivals.append(runtimes)
         return (runtimes <= self.deadline).astype(np.float32)
 
+    def record_timeout(self, count: int = 1) -> None:
+        """A worker blew its deadline (engine ``timeout`` events)."""
+        self.timeouts += int(count)
+
+    def record_retry(self, count: int = 1) -> None:
+        """A timed-out task was resubmitted with a fresh sketch (``retry`` events)."""
+        self.retries += int(count)
+
     def report(self) -> Dict[str, float]:
         if not self.arrivals:
             return {}
         r = np.stack(self.arrivals)
+        finite = r[np.isfinite(r)]
         on_time = (r <= self.deadline).mean()
         return {
             "steps": float(r.shape[0]),
-            "mean_runtime": float(r.mean()),
-            "p95_runtime": float(np.quantile(r, 0.95)),
+            "mean_runtime": float(finite.mean()) if finite.size else float("inf"),
+            "p50_runtime": float(np.quantile(finite, 0.50)) if finite.size else float("inf"),
+            "p95_runtime": float(np.quantile(finite, 0.95)) if finite.size else float("inf"),
             "on_time_fraction": float(on_time),
             "effective_q": float(on_time * self.q),
+            "timeouts": float(self.timeouts),
+            "retries": float(self.retries),
         }
 
 

@@ -1,0 +1,57 @@
+"""`repro.runtime` — asynchronous serverless execution engine.
+
+The paper's deployment model as a first-class subsystem: an event-driven master
+that invokes stateless sketch-solve workers, folds results into a running average
+as they arrive (Algorithm 1 with the realized q′), retries blown deadlines with
+fresh i.i.d. sketches, stops early when the estimate is accurate enough, and logs
+every transition as structured telemetry.
+
+    from repro import runtime as rt
+
+    res = rt.serverless_sketch_solve(
+        spec, key, A, b, q=32,
+        latency=rt.HeavyTailLatency(scale_s=0.5, alpha=1.5, seed=0),
+        config=rt.RuntimeConfig(deadline_s=1.0, max_retries=2, target_error=1e-2),
+        error_fn="probe",
+    )
+    res.xbar                # the running average at stop time
+    res.events.to_jsonl(p)  # deterministic replay log
+    res.summary()           # p50/p95, retries, timeouts, effective q', ...
+"""
+from repro.runtime.engine import RuntimeConfig, RuntimeResult, ServerlessEngine, TaskQueue
+from repro.runtime.latency import (
+    ConstantLatency,
+    DropLatency,
+    HeavyTailLatency,
+    LatencyModel,
+    LognormalLatency,
+)
+from repro.runtime.tasks import (
+    make_least_norm_compute,
+    make_sketch_solve_compute,
+    probe_error_fn,
+    serverless_sketch_solve,
+    subsample_probe,
+    theory_error_fn,
+)
+from repro.runtime.telemetry import Event, EventLog
+
+__all__ = [
+    "RuntimeConfig",
+    "RuntimeResult",
+    "ServerlessEngine",
+    "TaskQueue",
+    "LatencyModel",
+    "ConstantLatency",
+    "LognormalLatency",
+    "HeavyTailLatency",
+    "DropLatency",
+    "Event",
+    "EventLog",
+    "make_sketch_solve_compute",
+    "make_least_norm_compute",
+    "serverless_sketch_solve",
+    "theory_error_fn",
+    "probe_error_fn",
+    "subsample_probe",
+]

@@ -1,0 +1,267 @@
+"""Asynchronous serverless execution engine (the paper's master, made explicit).
+
+The paper's Algorithm 1 is usually summarized as "average q sketched solutions",
+but its deployment is an *event loop*: the master invokes q stateless lambdas,
+results trickle in under a random latency distribution, the master folds each one
+into a running average the moment it arrives, re-invokes workers that blew the
+deadline, and stops as soon as the estimate is good enough — it never waits for
+the stragglers it can do without. This module is that loop, built to be both
+
+  * **really parallel** — each task's compute (a jitted sketch-and-solve closure)
+    runs on a thread pool, and
+  * **exactly replayable** — *ordering* comes only from the simulated clock of a
+    seeded :class:`~repro.runtime.latency.LatencyModel` plus a deterministic
+    dispatch-order tiebreak, never from thread scheduling. Same seed ⇒ identical
+    event log (byte-for-byte JSONL) and bitwise-identical x̄.
+
+Pieces:
+  * :class:`TaskQueue`   — the priority queue of future events (arrivals/timeouts),
+    keyed by (sim_time, seq) so ties resolve deterministically.
+  * :class:`RuntimeConfig` — deadline, retry/backoff, early-stop target.
+  * :class:`ServerlessEngine.run` — dispatch → {arrive | timeout → backoff+retry}
+    with a Welford running mean (partial averages exact at every event), early
+    stopping on a pluggable error estimate, and cancellation of in-flight work.
+
+Retries are *new i.i.d. sketches*, never replays: each resubmission draws a fresh
+``round_id`` from a monotone counter, and the worker key is
+``prng.worker_key(base_key, worker_id, round_id)`` — the same key a synchronous
+mesh worker with that (worker, round) coordinate would derive, which is what makes
+the runtime-vs-``distributed_sketch_solve`` equivalence testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.runtime.latency import LatencyModel
+from repro.runtime.telemetry import EventLog
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Knobs of the master loop.
+
+    deadline_s:      per-invocation deadline; a task that would finish later times
+                     out (its compute is never scheduled — the lambda is abandoned).
+    max_retries:     resubmissions per logical task after its first timeout.
+    backoff_base_s:  wait before the first retry; grows by ``backoff_factor``.
+    target_error:    early-stop threshold for the run's error estimate (None = run
+                     every task to completion).
+    min_results:     never early-stop on fewer than this many folded results.
+    max_threads:     thread-pool width for the actual compute.
+    """
+
+    deadline_s: float = 1.0
+    max_retries: int = 2
+    backoff_base_s: float = 0.05
+    backoff_factor: float = 2.0
+    target_error: Optional[float] = None
+    min_results: int = 1
+    max_threads: int = 8
+
+
+class TaskQueue:
+    """Deterministic future-event queue: pops in (sim_time, push_order) order."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, dict]] = []
+        self._pushes = 0
+
+    def push(self, t: float, item: dict) -> None:
+        heapq.heappush(self._heap, (float(t), self._pushes, item))
+        self._pushes += 1
+
+    def pop(self) -> Tuple[float, dict]:
+        t, _, item = heapq.heappop(self._heap)
+        return t, item
+
+    def drain(self) -> List[Tuple[float, dict]]:
+        out = []
+        while self._heap:
+            out.append(self.pop())
+        return out
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    """What one engine run produced (x̄ plus its full provenance)."""
+
+    xbar: np.ndarray                    # running average over everything that arrived
+    count: int                          # realized q' — results actually folded in
+    submitted: int                      # logical tasks in the initial wave
+    dispatched: int                     # invocations incl. retries
+    arrived: List[Tuple[int, int, int]]  # (worker_id, round_id, attempt), arrival order
+    stopped_early: bool
+    final_error: Optional[float]        # last error estimate (None if no estimator)
+    events: EventLog
+
+    @property
+    def realized_mask(self) -> np.ndarray:
+        """(q,) float mask over the initial wave: 1 where worker w's *attempt-0*
+        task arrived (and was folded in before any early stop). Feeding this to
+        ``distributed_sketch_solve(..., straggler_mask=...)`` reproduces x̄ exactly
+        when no retries arrived (retried tasks carry fresh rounds the synchronous
+        call knows nothing about)."""
+        mask = np.zeros((self.submitted,), np.float32)
+        for w, _, attempt in self.arrived:
+            if attempt == 0 and 0 <= w < self.submitted:
+                mask[w] = 1.0
+        return mask
+
+    def summary(self, *, deadline: Optional[float] = None) -> Dict:
+        s = self.events.summary(q=self.submitted, deadline=deadline)
+        s.update(
+            count=self.count,
+            submitted=self.submitted,
+            dispatched=self.dispatched,
+            stopped_early=self.stopped_early,
+            final_error=self.final_error,
+        )
+        return s
+
+
+class ServerlessEngine:
+    """The master loop: dispatch, fold arrivals, retry timeouts, stop when done.
+
+    ``compute_fn(worker_id, round_id) -> np.ndarray`` is the worker payload — see
+    :mod:`repro.runtime.tasks` for the sketch-solve builders. It must be a pure
+    function of its arguments (workers are stateless lambdas); it runs on the
+    thread pool while the event loop orders everything by simulated time.
+    """
+
+    def __init__(
+        self,
+        compute_fn: Callable[[int, int], np.ndarray],
+        latency: LatencyModel,
+        config: Optional[RuntimeConfig] = None,
+    ):
+        self.compute_fn = compute_fn
+        self.latency = latency
+        self.config = config or RuntimeConfig()
+
+    # ------------------------------------------------------------------ run
+
+    def run(
+        self,
+        q: Optional[int] = None,
+        *,
+        tasks: Optional[Sequence[Tuple[int, int]]] = None,
+        error_fn: Optional[Callable[[np.ndarray, int], float]] = None,
+    ) -> RuntimeResult:
+        """Execute one job: the initial wave is ``tasks`` ([(worker_id, round_id)])
+        or, when only ``q`` is given, [(0,0) … (q-1,0)] — one task per worker,
+        round 0, exactly Algorithm 1's single wave.
+
+        ``error_fn(xbar, count)`` is evaluated at every arrival; its value is logged
+        on the event (the error-vs-wallclock trace) and compared against
+        ``config.target_error`` for early stopping.
+        """
+        cfg = self.config
+        if tasks is None:
+            if q is None:
+                raise ValueError("pass q or an explicit task list")
+            tasks = [(w, 0) for w in range(q)]
+        tasks = [(int(w), int(r)) for w, r in tasks]
+        next_round = max((r for _, r in tasks), default=-1) + 1
+
+        queue = TaskQueue()
+        log = EventLog()
+        pool = ThreadPoolExecutor(max_workers=cfg.max_threads)
+        mean: Optional[np.ndarray] = None
+        count = 0
+        dispatched = 0
+        arrived: List[Tuple[int, int, int]] = []
+        final_error: Optional[float] = None
+        stopped = False
+
+        def dispatch(t: float, task_id: int, w: int, r: int, attempt: int) -> None:
+            nonlocal dispatched
+            dispatched += 1
+            lat = self.latency.sample(w, r, attempt)
+            log.emit(t, "dispatch", task_id, w, r, attempt, latency_s=lat)
+            if lat <= cfg.deadline_s:
+                fut = pool.submit(self.compute_fn, w, r)
+                queue.push(
+                    t + lat,
+                    {"kind": "arrive", "task_id": task_id, "w": w, "r": r,
+                     "attempt": attempt, "latency_s": lat, "future": fut},
+                )
+            else:
+                # The result would miss the deadline — the master abandons the
+                # invocation (never schedules its compute) and hears the timeout.
+                queue.push(
+                    t + cfg.deadline_s,
+                    {"kind": "timeout", "task_id": task_id, "w": w, "r": r,
+                     "attempt": attempt, "latency_s": lat},
+                )
+
+        try:
+            for task_id, (w, r) in enumerate(tasks):
+                dispatch(0.0, task_id, w, r, attempt=0)
+
+            while len(queue):
+                t, item = queue.pop()
+                task_id, w, r, attempt = item["task_id"], item["w"], item["r"], item["attempt"]
+
+                if item["kind"] == "arrive":
+                    x = np.asarray(item["future"].result(), dtype=np.float64)
+                    count += 1
+                    mean = x.copy() if mean is None else mean + (x - mean) / count
+                    arrived.append((w, r, attempt))
+                    err = None
+                    if error_fn is not None:
+                        err = float(error_fn(mean, count))
+                        final_error = err
+                    log.emit(t, "arrive", task_id, w, r, attempt,
+                             latency_s=item["latency_s"], count=count, error=err)
+                    if (
+                        cfg.target_error is not None
+                        and err is not None
+                        and err <= cfg.target_error
+                        and count >= cfg.min_results
+                    ):
+                        log.emit(t, "stop", task_id, w, r, attempt,
+                                 count=count, error=err)
+                        stopped = True
+                        for tc, pending in queue.drain():
+                            log.emit(
+                                tc, "cancel", pending["task_id"], pending["w"],
+                                pending["r"], pending["attempt"],
+                            )
+                            fut = pending.get("future")
+                            if fut is not None:
+                                fut.cancel()
+                        break
+
+                elif item["kind"] == "timeout":
+                    log.emit(t, "timeout", task_id, w, r, attempt,
+                             latency_s=item["latency_s"])
+                    if attempt < cfg.max_retries:
+                        delay = cfg.backoff_base_s * cfg.backoff_factor ** attempt
+                        fresh = next_round
+                        next_round += 1
+                        log.emit(t, "retry", task_id, w, fresh, attempt + 1,
+                                 backoff_s=delay)
+                        dispatch(t + delay, task_id, w, fresh, attempt + 1)
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+
+        if mean is None:
+            raise RuntimeError(
+                "no worker result ever arrived (all tasks dropped or timed out "
+                f"after {cfg.max_retries} retries) — x̄ is undefined; loosen the "
+                "deadline, raise max_retries, or use a lighter LatencyModel"
+            )
+        return RuntimeResult(
+            xbar=mean, count=count, submitted=len(tasks), dispatched=dispatched,
+            arrived=arrived, stopped_early=stopped, final_error=final_error,
+            events=log,
+        )

@@ -1,0 +1,149 @@
+"""Worker payloads and error estimators for the runtime engine.
+
+A *task* is one serverless invocation: derive the (worker, round) key, sketch,
+solve, return x̂_k. The builders here produce ``compute_fn(worker_id, round_id)``
+closures over one jitted kernel (compiled once, shared by every thread of the
+pool), reusing the exact solver stack of the synchronous path —
+``solve.sketch_and_solve`` with the fused single-pass sketch→Gram pipeline by
+default — and the exact key schedule ``prng.worker_key(base_key, w, round)`` of
+the ``shard_map`` workers, so an async run and a mesh run with the same realized
+worker set agree to float tolerance.
+
+Early-stop estimators (for ``RuntimeConfig.target_error``):
+
+  * :func:`theory_error_fn` — Theorem 1's closed form d/(q′(m−d−1)): predicted
+    relative error after q′ Gaussian results (a heuristic proxy for other kinds).
+  * :func:`probe_error_fn` — a held-out residual probe: relative excess cost of x̄
+    on (A_p, b_p) against the probe's own optimum, no theory assumptions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketches as sk, solve, theory
+from repro.runtime.engine import RuntimeConfig, RuntimeResult, ServerlessEngine
+from repro.runtime.latency import LatencyModel
+from repro.utils import prng
+
+
+def make_sketch_solve_compute(
+    spec: sk.SketchSpec,
+    base_key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    reg: float = 0.0,
+    method: str = "fused",
+) -> Callable[[int, int], np.ndarray]:
+    """One Algorithm-1 worker as a ``compute_fn``: (worker, round) ↦ x̂ ∈ R^d."""
+
+    @jax.jit
+    def _solve(wkey):
+        return solve.sketch_and_solve(spec, wkey, A, b, reg=reg, method=method)
+
+    def compute(worker_id: int, round_id: int) -> np.ndarray:
+        return np.asarray(_solve(prng.worker_key(base_key, worker_id, round_id)))
+
+    return compute
+
+
+def make_least_norm_compute(
+    spec: sk.SketchSpec,
+    base_key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+) -> Callable[[int, int], np.ndarray]:
+    """§V right-sketch worker (n < d) as a ``compute_fn``."""
+
+    @jax.jit
+    def _solve(wkey):
+        return solve.sketch_least_norm(spec, wkey, A, b)
+
+    def compute(worker_id: int, round_id: int) -> np.ndarray:
+        return np.asarray(_solve(prng.worker_key(base_key, worker_id, round_id)))
+
+    return compute
+
+
+# ----------------------------------------------------------------- error estimators
+
+
+def theory_error_fn(spec: sk.SketchSpec, d: int) -> Callable[[np.ndarray, int], float]:
+    """Predicted relative error after q′ arrivals — Theorem 1, exact for Gaussian
+    sketches (documented heuristic otherwise). Ignores x̄: a pure function of the
+    realized count, so stopping is decided without touching the data."""
+    single = theory.gaussian_single_error(spec.m, d)
+
+    def err(_xbar: np.ndarray, count: int) -> float:
+        return single / max(count, 1)
+
+    return err
+
+
+def probe_error_fn(A_probe: jax.Array, b_probe: jax.Array) -> Callable[[np.ndarray, int], float]:
+    """Held-out residual probe: (f_p(x̄) − f_p*) / f_p* on probe rows.
+
+    The probe's own optimum f_p* is computed once; each arrival costs one (n_p, d)
+    matvec. With probe rows subsampled from (A, b) this estimates the paper's
+    relative approximation error without knowing the full problem's f*."""
+    x_p = solve.lstsq(A_probe, b_probe)
+    fstar = float(solve.residual_cost(A_probe, b_probe, x_p))
+
+    @jax.jit
+    def _cost(x):
+        return solve.residual_cost(A_probe, b_probe, x)
+
+    def err(xbar: np.ndarray, _count: int) -> float:
+        f = float(_cost(jnp.asarray(xbar, A_probe.dtype)))
+        return (f - fstar) / max(fstar, 1e-30)
+
+    return err
+
+
+def subsample_probe(
+    key: jax.Array, A: jax.Array, b: jax.Array, rows: int = 1024
+) -> Tuple[jax.Array, jax.Array]:
+    """Uniform row probe of (A, b) for :func:`probe_error_fn`."""
+    n = A.shape[0]
+    idx = jax.random.choice(key, n, (min(rows, n),), replace=False)
+    return A[idx], b[idx]
+
+
+# ------------------------------------------------------------------- one-call driver
+
+
+def serverless_sketch_solve(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    q: int,
+    latency: LatencyModel,
+    config: Optional[RuntimeConfig] = None,
+    rounds: int = 1,
+    reg: float = 0.0,
+    method: str = "fused",
+    error_fn: Union[None, str, Callable[[np.ndarray, int], float]] = None,
+    probe_rows: int = 1024,
+) -> RuntimeResult:
+    """Algorithm 1 on the async engine: ``rounds`` waves of ``q`` workers, averaged
+    as they arrive. ``error_fn``: a callable, ``"theory"``, ``"probe"``, or None
+    (None still runs every task; "theory"/"probe" also enable the early-stop
+    comparison when ``config.target_error`` is set).
+    """
+    if error_fn == "theory":
+        error_fn = theory_error_fn(spec, A.shape[1])
+    elif error_fn == "probe":
+        pk = jax.random.fold_in(key, 0x9B0BE)
+        error_fn = probe_error_fn(*subsample_probe(pk, A, b, rows=probe_rows))
+
+    compute = make_sketch_solve_compute(spec, key, A, b, reg=reg, method=method)
+    tasks: Sequence[Tuple[int, int]] = [(w, r) for r in range(rounds) for w in range(q)]
+    engine = ServerlessEngine(compute, latency, config)
+    return engine.run(tasks=tasks, error_fn=error_fn)

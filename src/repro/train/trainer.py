@@ -8,8 +8,13 @@ scale in tests):
   * **crash-safe saves** — checkpoints are atomic (see checkpoint/store.py) and
     written asynchronously; ``Trainer.run`` recovers from the latest complete step on
     startup automatically.
-  * **straggler simulation** — optional per-step worker mask generation (lognormal
-    deadline model from core/averaging.py) wired into the sketch-DP step.
+  * **straggler simulation** — delegated to the runtime subsystem: give
+    ``TrainerConfig.latency`` a seeded :class:`repro.runtime.LatencyModel` and every
+    step draws one wave of per-worker runtimes (pure function of (latency.seed,
+    worker, step) — restart-deterministic like everything else here), records it in
+    a ``HeartbeatMonitor``, and passes the resulting on-time mask as a third
+    argument to the step function (e.g. the sketch-DP step). ``straggler_report()``
+    emits the monitor's extended schema (p50/p95, timeouts, effective q').
 """
 from __future__ import annotations
 
@@ -43,6 +48,12 @@ class TrainerConfig:
     remat: str = "full"
     # straggler / failure injection (tests + demos)
     fail_at_step: Optional[int] = None
+    # async-runtime delegation: a repro.runtime LatencyModel ⇒ each step samples a
+    # (straggler_q,) runtime wave, and step_fn is called as step_fn(state, batch,
+    # mask) — the step must accept the extra mask argument (sketch-DP style).
+    latency: Optional[Any] = None
+    straggler_q: int = 8
+    deadline_s: float = 1.0
 
 
 class Trainer:
@@ -67,6 +78,11 @@ class Trainer:
         )
         self.ckpt = AsyncCheckpointer(tc.ckpt_dir, keep=tc.ckpt_keep) if tc.ckpt_dir else None
         self.history: List[Dict[str, float]] = []
+        self.monitor = None
+        if tc.latency is not None:
+            from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+            self.monitor = HeartbeatMonitor(q=tc.straggler_q, deadline=tc.deadline_s)
 
     # ------------------------------------------------------------------ state
     def init_or_restore(self) -> PyTree:
@@ -107,7 +123,16 @@ class Trainer:
                 s = int(state["step"])
                 continue
             batch = self.batch_for_step(s)
-            state, metrics = self.step_fn(state, batch)
+            if self.monitor is not None:
+                # one runtime wave per step: runtimes are a pure function of
+                # (latency.seed, worker, step), so a restarted job replays the
+                # same straggler pattern it would have seen uninterrupted.
+                wave = self.tc.latency.sample_wave(self.tc.straggler_q, round_id=s)
+                mask = self.monitor.record_step(wave)
+                self.monitor.record_timeout(int(self.tc.straggler_q - mask.sum()))
+                state, metrics = self.step_fn(state, batch, jnp.asarray(mask))
+            else:
+                state, metrics = self.step_fn(state, batch)
             if s % self.tc.log_every == 0 or s == steps - 1:
                 self.history.append({"step": s, **{k: float(v) for k, v in metrics.items()}})
             if self.ckpt and (s + 1) % self.tc.ckpt_every == 0:
@@ -117,3 +142,8 @@ class Trainer:
             self.ckpt.save(steps, state)
             self.ckpt.wait()
         return state
+
+    def straggler_report(self) -> Dict[str, float]:
+        """Extended heartbeat schema (p50/p95, timeouts, effective q') for the run;
+        empty when no latency model is configured."""
+        return self.monitor.report() if self.monitor is not None else {}

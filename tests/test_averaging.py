@@ -19,10 +19,16 @@ def test_masked_average_subset():
     np.testing.assert_allclose(np.asarray(averaging.masked_average(xs, mask)), [1.5] * 3)
 
 
-def test_masked_average_all_stragglers_safe():
+def test_masked_average_all_stragglers_poisons():
+    """q' = 0 has no estimator: NaN by default, legacy x̄=0 only by explicit opt-in."""
     xs = jnp.ones((4, 3))
     out = averaging.masked_average(xs, jnp.zeros((4,)))
-    assert np.isfinite(np.asarray(out)).all()
+    assert np.isnan(np.asarray(out)).all()
+    out0 = averaging.masked_average(xs, jnp.zeros((4,)), on_empty="zero")
+    np.testing.assert_array_equal(np.asarray(out0), 0.0)
+    # non-empty masks are untouched by the guard
+    out1 = averaging.masked_average(xs, jnp.array([0.0, 1.0, 0.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(out1), 1.0)
 
 
 def test_streaming_average_matches_batch():

@@ -28,6 +28,57 @@ def test_heartbeat_monitor_report():
     assert rep["p95_runtime"] >= rep["mean_runtime"]
 
 
+def test_heartbeat_report_p50_and_retry_timeout_counts():
+    mon = HeartbeatMonitor(q=4, deadline=1.0)
+    mon.record_step(np.array([0.2, 0.4, 0.6, 1.4]))
+    mon.record_step(np.array([0.3, 0.5, np.inf, 0.9]))  # a hard drop
+    mon.record_timeout(2)
+    mon.record_retry()
+    rep = mon.report()
+    assert rep["timeouts"] == 2.0 and rep["retries"] == 1.0
+    assert rep["p50_runtime"] <= rep["p95_runtime"]
+    assert np.isfinite(rep["mean_runtime"])  # inf arrivals excluded from moments
+    assert rep["on_time_fraction"] == 6 / 8
+
+
+def test_straggler_policy_to_latency_model():
+    pol = StragglerPolicy(drop_prob=0.3, deadline_quantile=0.8, seed=11)
+    model = pol.to_latency_model(mean_s=1.0, sigma=0.4)
+    wave = model.sample_wave(1024)
+    np.testing.assert_array_equal(wave, model.sample_wave(1024))  # seeded
+    assert 0.2 < np.isinf(wave).mean() < 0.4  # drop_prob carried over
+    # the derived deadline keeps ~deadline_quantile of the *surviving* lognormals
+    cut = pol.deadline_for(mean_s=1.0, sigma=0.4)
+    finite = wave[np.isfinite(wave)]
+    assert abs((finite <= cut).mean() - 0.8) < 0.05
+    assert StragglerPolicy(deadline_quantile=1.0).deadline_for() == float("inf")
+
+
+def test_runtime_telemetry_subsumes_heartbeat_report():
+    """An engine run's summary embeds the (extended) HeartbeatMonitor schema."""
+    import jax.numpy as jnp
+
+    from repro import runtime as rt
+
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (512, 8))
+    b = jax.random.normal(jax.random.PRNGKey(1), (512,))
+    spec = sk.SketchSpec("gaussian", 64)
+    res = rt.serverless_sketch_solve(
+        spec, key, A, b, q=8,
+        latency=rt.LognormalLatency(seed=4, mean_s=0.5, sigma=0.6),
+        config=rt.RuntimeConfig(deadline_s=0.55, max_retries=2),
+    )
+    s = res.summary(deadline=0.55)
+    hb = s["heartbeat"]
+    legacy_keys = {"steps", "mean_runtime", "p95_runtime", "on_time_fraction", "effective_q"}
+    assert legacy_keys <= set(hb)  # strict superset of the old schema
+    assert {"p50_runtime", "timeouts", "retries"} <= set(hb)
+    assert hb["timeouts"] == s["timeouts"] and hb["retries"] == s["retries"]
+    # attempt-0 on-time fraction in the monitor == the engine's realized first wave
+    assert hb["on_time_fraction"] * 8 == float((np.asarray(res.realized_mask) > 0).sum())
+
+
 def test_fit_head_converges_to_exact():
     key = jax.random.PRNGKey(0)
     n, d, k = 4096, 16, 3
