@@ -23,6 +23,7 @@ from benchmarks import (
     gradcomp_bench,
     ihs_baseline,
     kernel_bench,
+    multiworker_gram_bench,
     privacy_bound,
     runtime_bench,
     sketch_dp_ablation,
@@ -44,6 +45,7 @@ MODULES = {
     "kernels": kernel_bench,
     "sketch_ops": sketch_ops_bench,
     "fused": fused_solve_bench,
+    "multiworker": multiworker_gram_bench,
     "runtime": runtime_bench,
 }
 

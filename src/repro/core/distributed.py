@@ -139,7 +139,10 @@ def distributed_sketch_solve_master(
     ``method="fused"`` (default): the master streams all q fused Grams
     ``(G_k, c_k)`` in one mesh-parallel batched pass over [A | b]
     (``operators.gram_batched`` — S_kA never materialized), ships O(d²) per worker
-    instead of O(m·d), and each worker's solve is a d×d Cholesky. Any other
+    instead of O(m·d), and each worker's solve is a d×d Cholesky. When
+    ``spec.use_kernel`` is set and no real mesh shards the keys, that batched pass
+    is ONE multi-worker Pallas launch (``SketchOp.gram_batched_kernel``) reading A
+    once for all q sketches, rather than q kernel launches. Any other
     ``method`` keeps the two-pass reference: batch-materialize (S_kA, S_kb) via
     ``operators.sketch_data_batched`` and factorize per worker. Worker keys match
     :func:`distributed_sketch_solve`, so the two modes return the same x̄ for the

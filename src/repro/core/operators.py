@@ -213,6 +213,16 @@ def _split_gram(Gf: jax.Array, d: int, b: Optional[jax.Array]):
     return G, (c[:, 0] if b.ndim == 1 else c)
 
 
+def _split_gram_batched(Gf: jax.Array, d: int, b: Optional[jax.Array]):
+    """Batched :func:`_split_gram`: carve (q, d, d) G's and (q, d[, k]) c's out of
+    the (q, d+k, d+k) joint Grams of [A | b]."""
+    G = Gf[:, :d, :d]
+    if b is None:
+        return G, None
+    c = Gf[:, :d, d:]
+    return G, (c[..., 0] if b.ndim == 1 else c)
+
+
 def _gather_rows_reducer(rows: jax.Array):
     """Reducer accumulating ``A[rows]`` from row blocks: O(len(rows)·k) per block
     (a mask-and-gather), not a dense one-hot matmul."""
@@ -255,6 +265,17 @@ class SketchOp:
     @classmethod
     def build(cls, spec, key, n, *, scores=None) -> "SketchOp":
         raise NotImplementedError
+
+    @classmethod
+    def gram_batched_kernel(cls, spec, keys, A, b):
+        """All ``q`` workers' joint Grams ``(G_k, c_k)`` from ONE fused kernel
+        launch over ONE read of A — the multi-worker form of the kernel-routed
+        :meth:`gram_blocked`. Returns ``NotImplemented`` when the kind has no
+        multi-worker kernel; :func:`gram_batched` then falls back to per-key
+        dispatch. Worker slice ``w`` must be bitwise-identical to the per-key
+        kernel path under ``keys[w]``.
+        """
+        return NotImplemented
 
     # -- required tile primitive --------------------------------------------------
 
@@ -410,6 +431,69 @@ class GaussianOp(SketchOp):
             return _split_gram(Gf, A.shape[1], b)
         return super().gram_blocked(A, b, block_rows=block_rows)
 
+    @classmethod
+    def gram_batched_kernel(cls, spec, keys, A, b):
+        from repro.kernels.gaussian import ops as gops
+
+        Gf = gops.gaussian_gram_multi(keys, _join_b(A, b), spec.m)
+        return _split_gram_batched(Gf, A.shape[1], b)
+
+
+# --------------------------------------------------------------------- rademacher
+
+
+@register("rademacher")
+@dataclasses.dataclass(frozen=True)
+class RademacherOp(SketchOp):
+    """i.i.d. ±1/√m entries from the *packed* counter stream: sign(i, j) is bit
+    ``j % 32`` of ``threefry(key, i, j // 32)`` — one threefry call per 32 entries
+    (``kernels.common.packed_sign_words``), versus one call plus Box-Muller per
+    entry for the Gaussian family. Sub-gaussian, so Thm-1-style averaging and the
+    embedding bounds carry over (arXiv:2412.20301, arXiv:2203.09755); use it when
+    the Gaussian path is RNG-bound. Kernel and jnp paths share the same S.
+    """
+
+    k0: jax.Array = None
+    k1: jax.Array = None
+
+    @classmethod
+    def build(cls, spec, key, n, *, scores=None):
+        k0, k1 = kcommon.key_to_words(key)
+        return cls(spec=spec, key=key, n=n, k0=k0, k1=k1)
+
+    def columns(self, j0, block: int) -> jax.Array:
+        signs = kcommon.counter_rademacher_block(self.k0, self.k1, 0, j0, self.m, block)
+        return signs * jnp.float32(1.0 / math.sqrt(self.m))
+
+    def apply(self, A: jax.Array) -> jax.Array:
+        if self.spec.use_kernel:
+            from repro.kernels.rademacher import ops as rops
+
+            A2, batch = _to_2d(A, self.n)
+            return _from_2d(rops.rademacher_sketch(self.key, A2, self.m), batch)
+        return super().apply(A)
+
+    def gram_blocked(
+        self,
+        A: jax.Array,
+        b: Optional[jax.Array] = None,
+        *,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+    ):
+        if self.spec.use_kernel:
+            from repro.kernels.rademacher import ops as rops
+
+            Gf = rops.rademacher_gram(self.key, _join_b(A, b), self.m)
+            return _split_gram(Gf, A.shape[1], b)
+        return super().gram_blocked(A, b, block_rows=block_rows)
+
+    @classmethod
+    def gram_batched_kernel(cls, spec, keys, A, b):
+        from repro.kernels.rademacher import ops as rops
+
+        Gf = rops.rademacher_gram_multi(keys, _join_b(A, b), spec.m)
+        return _split_gram_batched(Gf, A.shape[1], b)
+
 
 # -------------------------------------------------------------------------- srht
 
@@ -491,6 +575,24 @@ class SRHTOp(SketchOp):
         # only the Pallas closed-form kernel makes true tile streaming pay.
         SAb = self.apply(_join_b(A, b)).astype(jnp.float32)
         return _split_gram(SAb.T @ SAb, A.shape[1], b)
+
+    @classmethod
+    def gram_batched_kernel(cls, spec, keys, A, b):
+        from repro.kernels.fwht import ops as fops
+
+        n_pad = sk.next_pow2(A.shape[0])
+
+        def params(key):
+            # Mirrors build() exactly — vmapped jax.random draws are elementwise
+            # deterministic per key, so rows/words bitwise-match the per-op build.
+            kd, kp = jax.random.split(key)
+            kd0, kd1 = kcommon.key_to_words(kd)
+            rows = jax.random.randint(kp, (spec.m,), 0, n_pad)
+            return rows, jnp.stack([kd0, kd1])
+
+        rows, key_words = jax.vmap(params)(keys)
+        Gf = fops.srht_gram_multi(_join_b(A, b), rows, key_words)
+        return _split_gram_batched(Gf, A.shape[1], b)
 
 
 # ------------------------------------------------------------------ row sampling
@@ -645,6 +747,18 @@ class SJLTOp(SketchOp):
             return _split_gram(Gf, A.shape[1], b)
         return super().gram_blocked(A, b, block_rows=block_rows)
 
+    @classmethod
+    def gram_batched_kernel(cls, spec, keys, A, b):
+        from repro.kernels.sjlt import ops as sops
+
+        row_idx = jnp.arange(A.shape[0])
+        words = kcommon.keys_to_words(keys)  # (q, 2) — same words build() derives
+        buckets, signs = jax.vmap(
+            lambda w: kcommon.sjlt_counter_params(w[0], w[1], row_idx, spec.s, spec.m)
+        )(words)
+        Gf = sops.sjlt_gram_multi(_join_b(A, b), buckets, signs, spec.m)
+        return _split_gram_batched(Gf, A.shape[1], b)
+
 
 # ------------------------------------------------------------------------ hybrid
 
@@ -736,6 +850,66 @@ def gram_blocked(
     return make_operator(spec, key, A.shape[0], scores=scores).gram_blocked(
         A, b, block_rows=block_rows
     )
+
+
+def gram_blocked_host(
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A,
+    b=None,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    scores=None,
+):
+    """Out-of-core :func:`gram_blocked` for A living on the HOST (numpy array or
+    ``np.memmap``): n can exceed *device* memory, not just VMEM.
+
+    Streams row tiles through the same ``(init, reducer, finish)`` triple as the
+    on-device path, but the scan loop runs in Python with double-buffered async
+    ``jax.device_put``: the H2D transfer of tile i+1 is issued *before* the jitted
+    reduce step of tile i is dispatched, so (dispatch being async) the copy
+    overlaps the compute — the two-slot pipeline of ``_scan_row_blocks``, with the
+    host→device link in place of the HBM fetch. Tiles are joined ``[A_blk|b_blk]``
+    and zero-padded to a constant shape host-side (one jit compile; zero rows
+    contribute nothing to any registered reducer). Device-resident peak memory is
+    O(block_rows·k + m·k). The counter-RNG contract makes the result match
+    ``gram_blocked`` on device-resident A to float tolerance for any block size.
+    """
+    import numpy as np
+
+    if A.ndim != 2:
+        raise ValueError(f"gram_blocked_host expects A of shape (n, d), got {A.shape}")
+    n, d = A.shape
+    bm = None if b is None else (b if b.ndim == 2 else np.asarray(b)[:, None])
+    k = d + (0 if bm is None else bm.shape[1])
+    op = make_operator(spec, key, n, scores=scores)
+    init, reducer, finish = op._stream_pieces(k)
+
+    bs = max(1, min(block_rows, n))
+    nb = -(-n // bs)
+
+    @jax.jit
+    def step(acc, j0, tile):
+        return reducer(acc, j0, tile)
+
+    def host_tile(i: int) -> np.ndarray:
+        j0 = i * bs
+        blk = np.asarray(A[j0 : j0 + bs], dtype=np.float32)
+        if bm is not None:
+            blk = np.concatenate([blk, np.asarray(bm[j0 : j0 + bs], dtype=np.float32)], axis=1)
+        if blk.shape[0] < bs:
+            blk = np.concatenate([blk, np.zeros((bs - blk.shape[0], k), np.float32)], axis=0)
+        return blk
+
+    acc = init
+    nxt = jax.device_put(host_tile(0))
+    for i in range(nb):
+        cur = nxt
+        if i + 1 < nb:
+            nxt = jax.device_put(host_tile(i + 1))  # in flight while step(i) runs
+        acc = step(acc, jnp.int32(i * bs), cur)
+    SAb = finish(acc).astype(jnp.float32)
+    return _split_gram(SAb.T @ SAb, d, b)
 
 
 # ------------------------------------------------------- multi-worker batching
@@ -859,8 +1033,17 @@ def gram_batched(
     the fused kernels, nothing of S or SA ever reaches HBM), which is what the
     master-sketch privacy mode ships and what IHS/head-fitting consume. Returns
     ``(Gs, cs)`` of shapes (q, d, d) and (q, d[, k]); ``cs`` is None when b is.
+
+    Kernel-routed kinds with a multi-worker kernel (gaussian/rademacher/sjlt/srht)
+    take :meth:`SketchOp.gram_batched_kernel` when no mesh is sharding the keys:
+    ONE launch / ONE read of A for all q sketches instead of q kernel launches,
+    bitwise-identical per worker to the per-key loop.
     """
     scores = _scores_for(spec, A, scores)
+    if spec.use_kernel and (mesh is None or not _mesh_batch_enabled()):
+        fused = _REGISTRY[spec.kind].gram_batched_kernel(spec, keys, A, b)
+        if fused is not NotImplemented:
+            return fused
     n = A.shape[0]
     extras = (A,) + (() if b is None else (b,)) + ((scores,) if scores is not None else ())
 

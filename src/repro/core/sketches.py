@@ -10,6 +10,8 @@ kernels in ``repro.kernels`` where one exists (interpret-mode on CPU).
 
 Supported kinds (paper section in brackets):
   * ``gaussian``       — i.i.d. N(0, 1/m)                                     [§III]
+  * ``rademacher``     — i.i.d. ±1/√m signs (sub-gaussian, 1-bit RNG; beyond-paper,
+                         same Thm-1-style averaging guarantees — arXiv:2412.20301)
   * ``srht``           — randomized Hadamard (ROS): sqrt(n/m)·P·(H/√n)·D      [§IV-A]
   * ``uniform``        — uniform row sampling, with/without replacement       [§IV-B]
   * ``leverage``       — leverage-score row sampling (exact or approximate)   [§IV-C]
@@ -39,7 +41,7 @@ import jax.numpy as jnp
 
 # --------------------------------------------------------------------------- spec
 
-KINDS = ("gaussian", "srht", "uniform", "leverage", "sjlt", "hybrid")
+KINDS = ("gaussian", "rademacher", "srht", "uniform", "leverage", "sjlt", "hybrid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +76,7 @@ class SketchSpec:
         if self.kind == "hybrid":
             if self.m_prime < self.m:
                 raise ValueError("hybrid sketch needs m_prime >= m")
-            if self.inner not in ("gaussian", "sjlt", "srht"):
+            if self.inner not in ("gaussian", "rademacher", "sjlt", "srht"):
                 raise ValueError(f"unsupported hybrid inner sketch {self.inner!r}")
 
     def apply(self, key: jax.Array, A: jax.Array) -> jax.Array:
@@ -158,6 +160,14 @@ def leverage_scores(
 def gaussian_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
     """S with i.i.d. N(0, 1/m) entries. E[SᵀS] = I. Unbiased estimator (Lemma 1)."""
     return apply_sketch(SketchSpec("gaussian", m, use_kernel=use_kernel), key, A)
+
+
+def rademacher_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:
+    """S with i.i.d. ±1/√m entries (packed counter signs). E[SᵀS] = I; sub-gaussian,
+    so it inherits the Gaussian family's embedding/averaging guarantees at ~1/60th
+    the RNG cost (one threefry word per 32 entries instead of threefry+Box-Muller
+    per entry)."""
+    return apply_sketch(SketchSpec("rademacher", m, use_kernel=use_kernel), key, A)
 
 
 def srht_sketch(key: jax.Array, A: jax.Array, m: int, *, use_kernel: bool = False) -> jax.Array:

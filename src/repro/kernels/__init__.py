@@ -11,4 +11,4 @@ projection. Each kernel ships as:
 All kernels are validated in interpret=True mode on CPU (this container) and written
 against TPU v5e constraints (last-dim 128 lanes, MXU-shaped matmuls, VMEM budgets).
 """
-from repro.kernels import fwht, sjlt, gaussian
+from repro.kernels import fwht, sjlt, gaussian, rademacher

@@ -81,3 +81,66 @@ def srht_gram_tiles(
         scratch_shapes=[pltpu.VMEM((m_pad, d), jnp.float32)],
         interpret=interpret,
     )(key_words, rows, A)
+
+
+def srht_gram_tiles_multi(
+    A: jax.Array,
+    rows: jax.Array,
+    key_words: jax.Array,
+    *,
+    block_n: int,
+    inv_sqrt_m: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """All q workers' SRHT Grams from ONE launch / ONE read of A.
+
+    ``rows``: (q, m_pad, 1) sampled Hadamard row ids (−1 padding); ``key_words``:
+    (q, 2) Rademacher-diagonal keys. The Hadamard column-index row ``j`` is built
+    once per grid step; the popcount parity, diagonal signs, and scatter matmul
+    run per worker in a static unroll. Output slice w is bitwise equal to a
+    single :func:`srht_gram_tiles` launch for worker w.
+    """
+    n, d = A.shape
+    q, m_pad, _ = rows.shape
+    n_tiles = n // block_n
+
+    def kernel(kw_ref, r_ref, a_ref, o_ref, acc_ref):
+        ni = pl.program_id(0)
+
+        @pl.when(ni == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a = a_ref[...]
+        j = (ni * block_n).astype(jnp.uint32) + jax.lax.broadcasted_iota(
+            jnp.uint32, (1, block_n), 1
+        )
+        for w in range(q):
+            r = r_ref[w]  # (m_pad, 1) int32, −1 marks padding
+            parity = jax.lax.population_count(r.astype(jnp.uint32) & j)
+            h = (1 - 2 * (parity & jnp.uint32(1)).astype(jnp.int32)).astype(jnp.float32)
+            dsign = common.counter_rademacher(kw_ref[w, 0], kw_ref[w, 1], j, jnp.uint32(0))
+            s_tile = jnp.where(r >= 0, h * dsign * jnp.float32(inv_sqrt_m), 0.0)
+            acc_ref[w] += jnp.dot(s_tile, a, preferred_element_type=jnp.float32)
+
+        @pl.when(ni == n_tiles - 1)
+        def _finish():
+            for w in range(q):
+                acc = acc_ref[w]
+                o_ref[w] = jax.lax.dot_general(
+                    acc, acc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+                )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((q, 2), lambda ni: (0, 0)),
+            pl.BlockSpec((q, m_pad, 1), lambda ni: (0, 0, 0)),
+            pl.BlockSpec((block_n, d), lambda ni: (ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, d, d), lambda ni: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((q, m_pad, d), jnp.float32)],
+        interpret=interpret,
+    )(key_words, rows, A)

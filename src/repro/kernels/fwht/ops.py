@@ -96,6 +96,38 @@ def srht_gram(
     return G[:d, :d]
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def srht_gram_multi(
+    A: jax.Array, rows: jax.Array, key_words: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """All q workers' SRHT Grams from ONE launch / ONE read of A.
+
+    ``rows``: (q, m) per-worker sampled Hadamard rows; ``key_words``: (q, 2)
+    diagonal keys. Returns (q, d, d) f32, slice w bitwise-identical to
+    ``srht_gram(A, rows[w], key_words[w])``.
+    """
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+    q, m = rows.shape
+    bn = min(MAX_TILE_ROWS, common.round_up(n, 8))
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    rows_p = (common.pad_axis_to(rows.astype(jnp.int32) + 1, 1, m_pad) - 1).reshape(q, m_pad, 1)
+
+    G = K_gram.srht_gram_tiles_multi(
+        Af,
+        rows_p,
+        key_words,
+        block_n=bn,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    return G[:, :d, :d]
+
+
 def flops_and_bytes(n: int, d: int) -> dict:
     """Structural roofline terms for one FWHT (matmul formulation)."""
     tile = min(n, MAX_TILE_ROWS)

@@ -79,6 +79,76 @@ def gaussian_gram_tiles(
     )(key_words, A)
 
 
+def gaussian_gram_tiles_multi(
+    A: jax.Array,
+    key_words: jax.Array,
+    m: int,
+    m_pad: int,
+    *,
+    block_n: int,
+    inv_sqrt_m: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """All q workers' Grams from ONE kernel launch / ONE read of A.
+
+    ``key_words``: (q, 2) uint32 — one counter key per worker. The grid still
+    walks row tiles of A, but each step contracts the tile against all q workers'
+    S tiles (statically unrolled: q is a trace-time constant, so every scratch
+    access is static — no dynamic VMEM indexing) into a (q, m_pad, d) scratch.
+    The A tile's index map depends only on the grid step, so it is fetched once
+    per step and reused across workers — the per-worker launch loop read A q
+    times. Per worker the op sequence (same tile order, same dot shapes) is
+    identical to :func:`gaussian_gram_tiles`, so the (d_pad, d_pad) slices of the
+    (q, d_pad, d_pad) output are bitwise equal to q single launches.
+
+    VMEM budget: scratch is q·m_pad·d·4 bytes (q=8, m=1024, d=257-pad → ~8 MiB on
+    the acceptance shape) — callers chunk q when the budget doesn't fit.
+    """
+    n, d = A.shape
+    q = key_words.shape[0]
+    n_tiles = n // block_n
+
+    def kernel(kw_ref, a_ref, o_ref, acc_ref):
+        ni = pl.program_id(0)
+
+        @pl.when(ni == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a = a_ref[...]
+        rows = jax.lax.broadcasted_iota(jnp.uint32, (m_pad, block_n), 0)
+        cols = (ni * block_n).astype(jnp.uint32) + jax.lax.broadcasted_iota(
+            jnp.uint32, (m_pad, block_n), 1
+        )
+        for w in range(q):  # static unroll: q accumulators, one read of A
+            s_tile = common.counter_normal(kw_ref[w, 0], kw_ref[w, 1], rows, cols) * jnp.float32(
+                inv_sqrt_m
+            )
+            s_tile = jnp.where(rows < jnp.uint32(m), s_tile, 0.0)
+            acc_ref[w] += jnp.dot(s_tile, a, preferred_element_type=jnp.float32)
+
+        @pl.when(ni == n_tiles - 1)
+        def _finish():
+            for w in range(q):
+                acc = acc_ref[w]
+                o_ref[w] = jax.lax.dot_general(
+                    acc, acc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+                )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((q, 2), lambda ni: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda ni: (ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, d, d), lambda ni: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((q, m_pad, d), jnp.float32)],
+        interpret=interpret,
+    )(key_words, A)
+
+
 def gaussian_adjoint_tiles(
     Y: jax.Array,
     key_words: jax.Array,

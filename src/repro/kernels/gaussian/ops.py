@@ -82,6 +82,38 @@ def gaussian_gram(key: jax.Array, A: jax.Array, m: int, *, interpret: bool | Non
     return G[:d, :d]
 
 
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def gaussian_gram_multi(
+    keys: jax.Array, A: jax.Array, m: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """All q workers' ``G_k = (S_kA)ᵀ(S_kA)`` from ONE launch / ONE read of A.
+
+    ``keys``: (q,)-batched PRNG keys (``prng.worker_keys``). Returns (q, d, d)
+    f32, worker slice w bitwise-identical to ``gaussian_gram(keys[w], A, m)``
+    (same padding, same tile walk, same per-worker op sequence).
+    """
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+    bn = min(BLOCK_N, common.round_up(n, 8))
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    key_words = common.keys_to_words(keys)
+
+    G = K_gram.gaussian_gram_tiles_multi(
+        Af,
+        key_words,
+        m,
+        m_pad,
+        block_n=bn,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    return G[:, :d, :d]
+
+
 @functools.partial(jax.jit, static_argnames=("n", "interpret"))
 def gaussian_adjoint(key: jax.Array, Y: jax.Array, n: int, *, interpret: bool | None = None) -> jax.Array:
     """Sᵀ @ Y with S ~ N(0, 1/m)^{m×n} regenerated in-core. Y: (m, k) or (m,)."""

@@ -1,0 +1,2 @@
+from repro.kernels.rademacher import ops, ref
+from repro.kernels.rademacher.ops import rademacher_gram, rademacher_gram_multi, rademacher_sketch

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: Rademacher sketch apply (S @ A) with packed in-core signs.
+
+Same tiling as the Gaussian apply kernel (``..gaussian.kernel.gaussian_tiles``),
+but each (block_m × block_n) S tile costs block_m·block_n/32 threefry calls and a
+bit-unpack instead of one threefry + Box-Muller per element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def rademacher_tiles(
+    A: jax.Array,
+    key_words: jax.Array,
+    m_pad: int,
+    *,
+    block_m: int,
+    block_n: int,
+    block_d: int,
+    inv_sqrt_m: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """out = S @ A with S = ±1/√m from the packed sign stream. A: (n_pad, d_pad)
+    zero-filled beyond the true n; ``block_n`` must be a multiple of 32."""
+    n, d = A.shape
+    grid = (m_pad // block_m, d // block_d, n // block_n)
+
+    def kernel(kw_ref, a_ref, o_ref):
+        mi = pl.program_id(0)
+        ni = pl.program_id(2)
+
+        @pl.when(ni == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        row0 = (mi * block_m).astype(jnp.uint32)
+        col0 = (ni * block_n).astype(jnp.uint32)
+        s_tile = common.packed_sign_tile(
+            kw_ref[0], kw_ref[1], row0, col0, block_m, block_n
+        ) * jnp.float32(inv_sqrt_m)
+        o_ref[...] += jnp.dot(s_tile, a_ref[...], preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda mi, di, ni: (0,)),
+            pl.BlockSpec((block_n, block_d), lambda mi, di, ni: (ni, di)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_d), lambda mi, di, ni: (mi, di)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, d), jnp.float32),
+        interpret=interpret,
+    )(key_words, A)

@@ -1,0 +1,126 @@
+"""Public packed-sign Rademacher ops: the cheap-RNG dense sketch family."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.rademacher import gram as K_gram
+from repro.kernels.rademacher import kernel as K
+
+BLOCK_M = 256
+BLOCK_N = 512
+BLOCK_D = 256
+
+
+def _block_n(n: int) -> int:
+    # One threefry word covers 32 columns, so the row-tile width must be a
+    # multiple of 32 (zero-pad A up to it; zero rows contribute nothing).
+    return min(BLOCK_N, common.round_up(n, 32))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def rademacher_sketch(
+    key: jax.Array, A: jax.Array, m: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """S @ A with S = ±1/√m generated in-core (1 threefry per 32 entries)."""
+    interpret = common.resolve_interpret(interpret)
+    orig_ndim = A.ndim
+    if A.ndim == 1:
+        A = A[:, None]
+    n, d = A.shape
+    dtype = A.dtype
+
+    bm = min(BLOCK_M, common.round_up(m, 8))
+    bn = _block_n(n)
+    bd = min(BLOCK_D, common.round_up(d, 128))
+    m_pad = common.round_up(m, bm)
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, bd)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    k0, k1 = common.key_to_words(key)
+    key_words = jnp.stack([k0, k1])
+
+    out = K.rademacher_tiles(
+        Af,
+        key_words,
+        m_pad,
+        block_m=bm,
+        block_n=bn,
+        block_d=bd,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    out = out[:m, :d].astype(dtype)
+    return out[:, 0] if orig_ndim == 1 else out
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def rademacher_gram(
+    key: jax.Array, A: jax.Array, m: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """G = (SA)ᵀ(SA) ∈ R^{d×d} in one fused pass — S and SA never touch HBM."""
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+    bn = _block_n(n)
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    k0, k1 = common.key_to_words(key)
+    key_words = jnp.stack([k0, k1])
+
+    G = K_gram.rademacher_gram_tiles(
+        Af,
+        key_words,
+        m,
+        m_pad,
+        block_n=bn,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    return G[:d, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def rademacher_gram_multi(
+    keys: jax.Array, A: jax.Array, m: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """All q workers' ``G_k`` from ONE launch / ONE read of A. ``keys``: (q,)
+    PRNG keys; returns (q, d, d), slice w bitwise == ``rademacher_gram``."""
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+    bn = _block_n(n)
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    key_words = common.keys_to_words(keys)
+
+    G = K_gram.rademacher_gram_tiles_multi(
+        Af,
+        key_words,
+        m,
+        m_pad,
+        block_n=bn,
+        inv_sqrt_m=1.0 / math.sqrt(m),
+        interpret=interpret,
+    )
+    return G[:, :d, :d]
+
+
+def flops_and_bytes(n: int, d: int, m: int) -> dict:
+    """Structural roofline: same matmul as the Gaussian sketch but ~2 uint ops of
+    RNG per element (120/32 threefry amortized + unpack) instead of ~60+."""
+    rng_flops_per_elem = 4  # 120-op threefry per 32 entries + shift/mask/ select
+    return {
+        "flops": 2 * m * n * d + rng_flops_per_elem * m * n,
+        "bytes": 4 * (n * d + m * d),
+        "bytes_materialized": 4 * (m * n + n * d + m * d),
+    }

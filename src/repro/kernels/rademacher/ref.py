@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the packed-sign Rademacher sketch.
+
+Materializes the same packed-contract S the kernels generate tile-by-tile
+(sign(i, j) = bit j%32 of threefry(key, i, j//32)[0], scaled 1/√m), then does a
+plain matmul. The kernels must match this to float precision.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+
+
+def sketch_matrix(key: jax.Array, m: int, n: int) -> jax.Array:
+    """The full S ∈ R^{m×n} with ±1/√m packed-contract entries."""
+    k0, k1 = common.key_to_words(key)
+    signs = common.counter_rademacher_block(k0, k1, jnp.uint32(0), jnp.uint32(0), m, n)
+    return signs * jnp.float32(1.0 / math.sqrt(m))
+
+
+def rademacher_sketch(key: jax.Array, A: jax.Array, m: int) -> jax.Array:
+    S = sketch_matrix(key, m, A.shape[0])
+    return (S @ A.astype(jnp.float32)).astype(A.dtype)

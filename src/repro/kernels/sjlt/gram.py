@@ -75,3 +75,66 @@ def sjlt_gram_tiles(
         scratch_shapes=[pltpu.VMEM((m_pad, d), jnp.float32)],
         interpret=interpret,
     )(buckets, signs, A)
+
+
+def sjlt_gram_tiles_multi(
+    A: jax.Array,
+    buckets: jax.Array,
+    signs: jax.Array,
+    m_pad: int,
+    *,
+    block_n: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """All q workers' SJLT Grams from ONE launch / ONE read of A.
+
+    ``buckets``/``signs``: (q, n_pad, s) — per-worker counter-derived parameters
+    (tiny: s ints per row vs d floats of A). The A tile *and* its s-replicated
+    copy are built once per grid step and shared across the statically-unrolled
+    worker loop; only the one-hot scatter matmul is per-worker. Per worker the op
+    sequence matches :func:`sjlt_gram_tiles`, so output slice w is bitwise equal
+    to a single launch with that worker's parameters.
+    """
+    n, d = A.shape
+    q, _, s = buckets.shape
+    n_tiles = n // block_n
+
+    def kernel(b_ref, s_ref, a_ref, o_ref, acc_ref):
+        ni = pl.program_id(0)
+
+        @pl.when(ni == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a = a_ref[...]
+        nb = a.shape[0]
+        a_rep = jnp.repeat(a, s, axis=0)  # shared across all q workers
+        cols = jax.lax.broadcasted_iota(jnp.int32, (nb * s, m_pad), 1)
+        for w in range(q):
+            flat = b_ref[w].reshape(nb * s, 1)
+            onehot = jnp.where(cols == flat, s_ref[w].reshape(nb * s, 1), 0.0).astype(a.dtype)
+            acc_ref[w] += jax.lax.dot_general(
+                onehot, a_rep, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+
+        @pl.when(ni == n_tiles - 1)
+        def _finish():
+            for w in range(q):
+                acc = acc_ref[w]
+                o_ref[w] = jax.lax.dot_general(
+                    acc, acc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+                )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((q, block_n, s), lambda ni: (0, ni, 0)),
+            pl.BlockSpec((q, block_n, s), lambda ni: (0, ni, 0)),
+            pl.BlockSpec((block_n, d), lambda ni: (ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, d, d), lambda ni: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((q, m_pad, d), jnp.float32)],
+        interpret=interpret,
+    )(buckets, signs, A)

@@ -95,6 +95,39 @@ def sjlt_gram(
     return G[:d, :d]
 
 
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def sjlt_gram_multi(
+    A: jax.Array,
+    buckets: jax.Array,
+    signs: jax.Array,
+    m: int,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """All q workers' ``G_k`` for per-worker SJLT params from ONE launch.
+
+    ``buckets``/``signs``: (q, n, s). Returns (q, d, d) f32; worker slice w is
+    bitwise-identical to ``sjlt_gram(A, buckets[w], signs[w], m)``.
+    """
+    interpret = common.resolve_interpret(interpret)
+    n, d = A.shape
+
+    bn = min(BLOCK_N, common.round_up(n, 8))
+    n_pad = common.round_up(n, bn)
+    d_pad = common.round_up(d, 128)
+    m_pad = common.round_up(m, 8)
+
+    Af = common.pad_axis_to(common.pad_axis_to(A.astype(jnp.float32), 0, n_pad), 1, d_pad)
+    # Padded (fictitious) rows: bucket -1 matches no accumulator column, sign 0.
+    buckets_p = common.pad_axis_to(buckets + 1, 1, n_pad) - 1
+    signs_p = common.pad_axis_to(signs.astype(jnp.float32), 1, n_pad)
+
+    G = K_gram.sjlt_gram_tiles_multi(
+        Af, buckets_p, signs_p, m_pad, block_n=bn, interpret=interpret
+    )
+    return G[:, :d, :d]
+
+
 def sjlt_sketch(
     key: jax.Array, A: jax.Array, m: int, *, s: int = 4, interpret: bool | None = None
 ) -> jax.Array:

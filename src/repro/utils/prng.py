@@ -11,6 +11,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# One RNG source of truth: the counter-based primitives live with the Pallas
+# kernels (repro.kernels.common) because the kernels must inline them; non-kernel
+# code imports them from here so there is exactly one definition of each.
+from repro.kernels.common import (  # noqa: F401  (re-exports)
+    bits_to_open_unit,
+    counter_normal,
+    counter_rademacher,
+    counter_rademacher_block,
+)
+
 
 def worker_key(base_key: jax.Array, worker_id: jax.Array | int, round_id: int = 0) -> jax.Array:
     """Deterministic per-(worker, round) key. Safe to call inside shard_map/vmap."""
@@ -40,9 +50,3 @@ def uniform_to_gaussian(u1: jax.Array, u2: jax.Array) -> tuple[jax.Array, jax.Ar
     r = jnp.sqrt(-2.0 * jnp.log(u1))
     theta = (2.0 * jnp.pi) * u2
     return r * jnp.cos(theta), r * jnp.sin(theta)
-
-
-def bits_to_open_unit(bits: jax.Array) -> jax.Array:
-    """uint32 bits -> float32 in the open interval (0, 1) (never exactly 0)."""
-    # 2**-32 ~ 2.33e-10; offset by half a ULP so log() is finite.
-    return (bits.astype(jnp.float32) + 0.5) * jnp.float32(2.0**-32)

@@ -61,7 +61,7 @@ def test_gram_blocked_matches_materialized_oracle(kind, block_rows):
     np.testing.assert_allclose(np.asarray(c), c_ref, rtol=2e-3, atol=1e-3, err_msg=kind)
 
 
-@pytest.mark.parametrize("kind", ["gaussian", "srht", "sjlt"])
+@pytest.mark.parametrize("kind", ["gaussian", "rademacher", "srht", "sjlt"])
 def test_kernel_gram_matches_materialized_oracle(kind):
     """The fully fused Pallas kernels (S generated in-core, accumulator in VMEM
     scratch) reproduce the dense two-pass Gram."""
@@ -76,7 +76,7 @@ def test_kernel_gram_matches_materialized_oracle(kind):
     np.testing.assert_allclose(np.asarray(c), c_ref, rtol=2e-3, atol=1e-3, err_msg=kind)
 
 
-@pytest.mark.parametrize("kind", ["gaussian", "srht", "sjlt"])
+@pytest.mark.parametrize("kind", ["gaussian", "rademacher", "srht", "sjlt"])
 def test_kernel_gram_matches_jnp_gram(kind):
     """use_kernel=True and the jnp streaming path draw the same counter-based S,
     so their Grams agree to float tolerance."""

@@ -20,7 +20,7 @@ FAST = settings(max_examples=20, deadline=None)
 @given(
     n=st.integers(8, 128),
     d=st.integers(1, 16),
-    kind=st.sampled_from(["gaussian", "uniform", "sjlt", "srht"]),
+    kind=st.sampled_from(["gaussian", "rademacher", "uniform", "sjlt", "srht"]),
     seed=st.integers(0, 2**20),
 )
 def test_sketch_shape_contract(n, d, kind, seed):
@@ -29,6 +29,23 @@ def test_sketch_shape_contract(n, d, kind, seed):
     SA = sk.apply_sketch(sk.SketchSpec(kind, m), jax.random.PRNGKey(seed + 1), A)
     assert SA.shape == (m, d)
     assert bool(jnp.isfinite(SA).all())
+
+
+@FAST
+@given(
+    kind=st.sampled_from(["gaussian", "rademacher"]),
+    n=st.integers(64, 256),
+    seed=st.integers(0, 2**20),
+)
+def test_subgaussian_embedding_quality(kind, n, seed):
+    """‖S y‖² concentrates around ‖y‖² for the dense sub-gaussian families — the
+    JL/embedding property the paper's averaging analysis rests on. m = 512 keeps
+    the relative deviation ~1/√m, so the loose factor-of-2 bounds are safe."""
+    m = 512
+    y = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    Sy = sk.apply_sketch(sk.SketchSpec(kind, m), jax.random.PRNGKey(seed + 1), y)
+    ratio = float(jnp.sum(Sy * Sy) / jnp.sum(y * y))
+    assert 0.5 < ratio < 2.0, (kind, ratio)
 
 
 @FAST
