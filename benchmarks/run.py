@@ -26,6 +26,7 @@ from benchmarks import (
     multiworker_gram_bench,
     privacy_bound,
     runtime_bench,
+    serve_bench,
     sketch_dp_ablation,
     sketch_ops_bench,
     thm1_validation,
@@ -47,6 +48,7 @@ MODULES = {
     "fused": fused_solve_bench,
     "multiworker": multiworker_gram_bench,
     "runtime": runtime_bench,
+    "serve": serve_bench,
 }
 
 

@@ -71,6 +71,25 @@ class StragglerPolicy:
 
         return LognormalLatency(mean_s=mean_s, sigma=sigma).quantile(self.deadline_quantile)
 
+    def to_deadline_policy(
+        self, *, mean_s: float = 1.0, sigma: float = 0.35, adaptive: bool = False
+    ):
+        """The engine-side :class:`~repro.runtime.engine.DeadlinePolicy` equivalent
+        of ``deadline_quantile``: a static cutoff at the lognormal quantile, or —
+        with ``adaptive=True`` — an :class:`~repro.runtime.engine.AdaptiveDeadline`
+        warm-started there that keeps targeting the same quantile from the
+        *observed* telemetry stream instead of the assumed lognormal."""
+        import math
+
+        from repro.runtime.engine import AdaptiveDeadline, StaticDeadline
+
+        cutoff = self.deadline_for(mean_s=mean_s, sigma=sigma)
+        if not adaptive:
+            return StaticDeadline(deadline_s=cutoff)
+        warmup = cutoff if math.isfinite(cutoff) else 4.0 * mean_s
+        quantile = self.deadline_quantile if self.deadline_quantile < 1.0 else 0.95
+        return AdaptiveDeadline(warmup_s=warmup, quantile=quantile)
+
 
 class HeartbeatMonitor:
     """Tracks simulated worker arrival times; produces masks + reports.

@@ -8,21 +8,28 @@ deadline, and stops as soon as the estimate is good enough — it never waits fo
 the stragglers it can do without. This module is that loop, built to be both
 
   * **really parallel** — each task's compute (a jitted sketch-and-solve closure)
-    runs on a thread pool, and
+    runs on a pluggable :mod:`~repro.runtime.backends` executor (``inline``,
+    ``thread``, or a real multi-process pool), and
   * **exactly replayable** — *ordering* comes only from the simulated clock of a
     seeded :class:`~repro.runtime.latency.LatencyModel` plus a deterministic
-    dispatch-order tiebreak, never from thread scheduling. Same seed ⇒ identical
-    event log (byte-for-byte JSONL) and bitwise-identical x̄.
+    dispatch-order tiebreak, never from thread or process scheduling. Same seed ⇒
+    identical event log (byte-for-byte JSONL) and bitwise-identical x̄,
+    *regardless of backend or pool width*.
 
 Pieces:
   * :class:`TaskQueue`   — the priority queue of future events (arrivals/timeouts),
     keyed by (sim_time, seq) so ties resolve deterministically.
-  * :class:`RuntimeConfig` — deadline, retry/backoff, early-stop target.
-  * :class:`ServerlessEngine.run` — dispatch → {arrive | timeout → backoff+retry}
-    with a Welford running mean (partial averages exact at every event), early
-    stopping on a pluggable error estimate, and cancellation of in-flight work.
+  * :class:`RuntimeConfig` — deadline, retry/backoff, early-stop target, backend.
+  * :class:`DeadlinePolicy` — per-dispatch deadlines: :class:`StaticDeadline`
+    (the historical fixed cutoff) or :class:`AdaptiveDeadline` (rolling-p95 of
+    the telemetry stream, clamped, with a warm-up default before enough samples).
+  * :class:`ServerlessEngine.run` — dispatch → {arrive | timeout → backoff+retry |
+    crash → drop → backoff+retry} with a Welford running mean (partial averages
+    exact at every event), early stopping on a pluggable error estimate, and
+    cancellation of in-flight work.
 
-Retries are *new i.i.d. sketches*, never replays: each resubmission draws a fresh
+Retries are *new i.i.d. sketches*, never replays: each resubmission — whether the
+deadline was blown or the worker process was killed mid-task — draws a fresh
 ``round_id`` from a monotone counter, and the worker key is
 ``prng.worker_key(base_key, worker_id, round_id)`` — the same key a synchronous
 mesh worker with that (worker, round) coordinate would derive, which is what makes
@@ -33,11 +40,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.runtime.backends import ExecutorBackend, WorkerCrashError, make_backend
 from repro.runtime.latency import LatencyModel
 from repro.runtime.telemetry import EventLog
 
@@ -48,12 +56,16 @@ class RuntimeConfig:
 
     deadline_s:      per-invocation deadline; a task that would finish later times
                      out (its compute is never scheduled — the lambda is abandoned).
-    max_retries:     resubmissions per logical task after its first timeout.
+                     Overridden per dispatch when a :class:`DeadlinePolicy` is
+                     passed to the engine.
+    max_retries:     resubmissions per logical task after its first timeout/crash.
     backoff_base_s:  wait before the first retry; grows by ``backoff_factor``.
     target_error:    early-stop threshold for the run's error estimate (None = run
                      every task to completion).
     min_results:     never early-stop on fewer than this many folded results.
-    max_threads:     thread-pool width for the actual compute.
+    max_threads:     pool width for the actual compute (threads or processes).
+    backend:         default executor backend — ``"inline"`` | ``"thread"`` |
+                     ``"process"`` (see :mod:`repro.runtime.backends`).
     """
 
     deadline_s: float = 1.0
@@ -63,6 +75,7 @@ class RuntimeConfig:
     target_error: Optional[float] = None
     min_results: int = 1
     max_threads: int = 8
+    backend: str = "thread"
 
 
 class TaskQueue:
@@ -88,6 +101,112 @@ class TaskQueue:
 
     def __len__(self) -> int:
         return len(self._heap)
+
+
+# ------------------------------------------------------------------ deadline policies
+
+
+class DeadlineTracker:
+    """Mutable per-run state of a :class:`DeadlinePolicy`. ``current()`` is read at
+    every dispatch; ``observe``/``observe_timeout`` are fed from the event stream
+    in simulated-clock order, so the deadline sequence is replay-deterministic."""
+
+    def observe(self, latency_s: float) -> None:
+        pass
+
+    def observe_timeout(self, deadline_s: float) -> None:
+        pass
+
+    def current(self) -> float:
+        raise NotImplementedError
+
+
+class DeadlinePolicy:
+    """Immutable spec; ``start()`` yields a fresh tracker for one engine run."""
+
+    def start(self) -> DeadlineTracker:
+        raise NotImplementedError
+
+
+class _StaticTracker(DeadlineTracker):
+    def __init__(self, deadline_s: float):
+        self._deadline_s = float(deadline_s)
+
+    def current(self) -> float:
+        return self._deadline_s
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticDeadline(DeadlinePolicy):
+    """The historical behavior: one fixed cutoff for every dispatch."""
+
+    deadline_s: float = 1.0
+
+    def start(self) -> DeadlineTracker:
+        return _StaticTracker(self.deadline_s)
+
+
+class _AdaptiveTracker(DeadlineTracker):
+    def __init__(self, policy: "AdaptiveDeadline"):
+        self._p = policy
+        self._samples: deque = deque(maxlen=policy.window)
+
+    def observe(self, latency_s: float) -> None:
+        if math.isfinite(latency_s):
+            self._samples.append(float(latency_s))
+
+    def observe_timeout(self, deadline_s: float) -> None:
+        # A timeout is a censored observation: the true latency is only known to
+        # exceed the deadline. Recording deadline × timeout_factor lets repeated
+        # timeouts push the estimate *up* instead of anchoring it at the cutoff.
+        if math.isfinite(deadline_s):
+            self._samples.append(float(deadline_s) * self._p.timeout_factor)
+
+    def current(self) -> float:
+        p = self._p
+        if len(self._samples) < p.min_samples:
+            raw = p.warmup_s
+        else:
+            raw = float(np.quantile(np.asarray(self._samples), p.quantile)) * p.margin
+        return min(max(raw, p.min_s), p.max_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveDeadline(DeadlinePolicy):
+    """Online deadlines from the telemetry stream: rolling p-quantile (default p95)
+    of the last ``window`` observed task latencies, scaled by ``margin`` and
+    clamped to ``[min_s, max_s]``. Before ``min_samples`` observations the
+    (clamped) ``warmup_s`` default applies — the whole initial wave dispatches at
+    t=0, so adaptation kicks in on retries and later rounds, exactly where a
+    mis-set static deadline burns its retry budget.
+
+    The deadline is monotone in the observed latencies and always within the
+    clamp — pinned by a property test in ``tests/test_properties.py``.
+    """
+
+    warmup_s: float = 1.0
+    quantile: float = 0.95
+    margin: float = 1.25
+    min_samples: int = 5
+    window: int = 64
+    min_s: float = 1e-3
+    max_s: float = 120.0
+    timeout_factor: float = 1.5
+
+    def start(self) -> DeadlineTracker:
+        return _AdaptiveTracker(self)
+
+
+def resolve_deadline_policy(
+    deadline: Union[None, float, DeadlinePolicy], config: RuntimeConfig
+) -> DeadlinePolicy:
+    """None → the config's static deadline; a float → a static policy; a policy →
+    itself. Keeps every pre-policy call site working unchanged."""
+    if deadline is None:
+        return StaticDeadline(config.deadline_s)
+    if isinstance(deadline, DeadlinePolicy):
+        return deadline
+    return StaticDeadline(float(deadline))
 
 
 @dataclasses.dataclass
@@ -129,12 +248,19 @@ class RuntimeResult:
 
 
 class ServerlessEngine:
-    """The master loop: dispatch, fold arrivals, retry timeouts, stop when done.
+    """The master loop: dispatch, fold arrivals, retry timeouts/crashes, stop when done.
 
     ``compute_fn(worker_id, round_id) -> np.ndarray`` is the worker payload — see
-    :mod:`repro.runtime.tasks` for the sketch-solve builders. It must be a pure
-    function of its arguments (workers are stateless lambdas); it runs on the
-    thread pool while the event loop orders everything by simulated time.
+    :mod:`repro.runtime.tasks` for the sketch-solve builders (picklable, as the
+    ``process`` backend requires). It must be a pure function of its arguments
+    (workers are stateless lambdas); it runs on the executor backend while the
+    event loop orders everything by simulated time.
+
+    ``backend``: a name (``"inline"``/``"thread"``/``"process"``), an
+    :class:`~repro.runtime.backends.ExecutorBackend` instance (reused across runs,
+    never shut down by the engine), or None → ``config.backend``.
+    ``deadline``: a :class:`DeadlinePolicy`, a float, or None → the config's
+    static ``deadline_s``.
     """
 
     def __init__(
@@ -142,10 +268,15 @@ class ServerlessEngine:
         compute_fn: Callable[[int, int], np.ndarray],
         latency: LatencyModel,
         config: Optional[RuntimeConfig] = None,
+        *,
+        backend: Union[None, str, ExecutorBackend] = None,
+        deadline: Union[None, float, DeadlinePolicy] = None,
     ):
         self.compute_fn = compute_fn
         self.latency = latency
         self.config = config or RuntimeConfig()
+        self.backend = backend
+        self.deadline = deadline
 
     # ------------------------------------------------------------------ run
 
@@ -172,9 +303,16 @@ class ServerlessEngine:
         tasks = [(int(w), int(r)) for w, r in tasks]
         next_round = max((r for _, r in tasks), default=-1) + 1
 
+        tracker = resolve_deadline_policy(self.deadline, cfg).start()
+        backend_owned = not isinstance(self.backend, ExecutorBackend)
+        backend = make_backend(
+            self.backend if self.backend is not None else cfg.backend,
+            self.compute_fn,
+            max_workers=cfg.max_threads,
+        )
+
         queue = TaskQueue()
         log = EventLog()
-        pool = ThreadPoolExecutor(max_workers=cfg.max_threads)
         mean: Optional[np.ndarray] = None
         count = 0
         dispatched = 0
@@ -185,23 +323,35 @@ class ServerlessEngine:
         def dispatch(t: float, task_id: int, w: int, r: int, attempt: int) -> None:
             nonlocal dispatched
             dispatched += 1
+            dl = tracker.current()
             lat = self.latency.sample(w, r, attempt)
-            log.emit(t, "dispatch", task_id, w, r, attempt, latency_s=lat)
-            if lat <= cfg.deadline_s:
-                fut = pool.submit(self.compute_fn, w, r)
+            log.emit(t, "dispatch", task_id, w, r, attempt, latency_s=lat,
+                     deadline_s=None if math.isinf(dl) else dl)
+            if lat <= dl:
+                handle = backend.submit(w, r)
                 queue.push(
                     t + lat,
                     {"kind": "arrive", "task_id": task_id, "w": w, "r": r,
-                     "attempt": attempt, "latency_s": lat, "future": fut},
+                     "attempt": attempt, "latency_s": lat, "deadline_s": dl,
+                     "handle": handle},
                 )
             else:
                 # The result would miss the deadline — the master abandons the
                 # invocation (never schedules its compute) and hears the timeout.
                 queue.push(
-                    t + cfg.deadline_s,
+                    t + dl,
                     {"kind": "timeout", "task_id": task_id, "w": w, "r": r,
-                     "attempt": attempt, "latency_s": lat},
+                     "attempt": attempt, "latency_s": lat, "deadline_s": dl},
                 )
+
+        def retry(t: float, task_id: int, w: int, attempt: int) -> None:
+            nonlocal next_round
+            if attempt < cfg.max_retries:
+                delay = cfg.backoff_base_s * cfg.backoff_factor ** attempt
+                fresh = next_round
+                next_round += 1
+                log.emit(t, "retry", task_id, w, fresh, attempt + 1, backoff_s=delay)
+                dispatch(t + delay, task_id, w, fresh, attempt + 1)
 
         try:
             for task_id, (w, r) in enumerate(tasks):
@@ -212,7 +362,18 @@ class ServerlessEngine:
                 task_id, w, r, attempt = item["task_id"], item["w"], item["r"], item["attempt"]
 
                 if item["kind"] == "arrive":
-                    x = np.asarray(item["future"].result(), dtype=np.float64)
+                    try:
+                        x = np.asarray(backend.result(item["handle"]), dtype=np.float64)
+                    except WorkerCrashError:
+                        # The OS process running this task died mid-compute. The
+                        # master hears silence where a result was due: a drop,
+                        # re-entering the same backoff→retry loop as a timeout
+                        # (fresh round-folded key, new i.i.d. sketch).
+                        log.emit(t, "drop", task_id, w, r, attempt,
+                                 latency_s=item["latency_s"])
+                        retry(t, task_id, w, attempt)
+                        continue
+                    tracker.observe(item["latency_s"])
                     count += 1
                     mean = x.copy() if mean is None else mean + (x - mean) / count
                     arrived.append((w, r, attempt))
@@ -236,23 +397,19 @@ class ServerlessEngine:
                                 tc, "cancel", pending["task_id"], pending["w"],
                                 pending["r"], pending["attempt"],
                             )
-                            fut = pending.get("future")
-                            if fut is not None:
-                                fut.cancel()
+                            handle = pending.get("handle")
+                            if handle is not None:
+                                backend.cancel(handle)
                         break
 
                 elif item["kind"] == "timeout":
+                    tracker.observe_timeout(item["deadline_s"])
                     log.emit(t, "timeout", task_id, w, r, attempt,
                              latency_s=item["latency_s"])
-                    if attempt < cfg.max_retries:
-                        delay = cfg.backoff_base_s * cfg.backoff_factor ** attempt
-                        fresh = next_round
-                        next_round += 1
-                        log.emit(t, "retry", task_id, w, fresh, attempt + 1,
-                                 backoff_s=delay)
-                        dispatch(t + delay, task_id, w, fresh, attempt + 1)
+                    retry(t, task_id, w, attempt)
         finally:
-            pool.shutdown(wait=False, cancel_futures=True)
+            if backend_owned:
+                backend.shutdown()
 
         if mean is None:
             raise RuntimeError(

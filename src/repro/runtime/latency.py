@@ -18,6 +18,8 @@ these via ``StragglerPolicy.to_latency_model``):
   * ``HeavyTailLatency`` — Pareto tail; stragglers arbitrarily late, mean may not
     even exist for ``alpha <= 1``. The regime where ignoring the tail pays most.
   * ``DropLatency``      — wraps another model with hard failures.
+  * ``DriftLatency``     — lognormal whose median drifts geometrically with the
+    round id (cold starts, queue buildup): the regime adaptive deadlines exist for.
   * ``ConstantLatency``  — degenerate model for tests and synchronous baselines.
 """
 from __future__ import annotations
@@ -91,6 +93,24 @@ class HeavyTailLatency(LatencyModel):
     def sample(self, worker_id: int, round_id: int = 0, attempt: int = 0) -> float:
         g = _rng(self.seed, self._SALT, worker_id, round_id, attempt)
         return float(self.scale_s * (1.0 + g.pareto(self.alpha)))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftLatency(LatencyModel):
+    """Non-stationary lognormal: median ``mean_s · growth^round_id``. With
+    ``growth > 1`` later rounds (and every retry, which always carries a fresh,
+    larger round id) run slower — a static deadline tuned on round 0 burns its
+    whole retry budget, while an :class:`~repro.runtime.engine.AdaptiveDeadline`
+    tracks the drift through the telemetry stream."""
+
+    mean_s: float = 1.0
+    sigma: float = 0.35
+    growth: float = 1.3
+
+    def sample(self, worker_id: int, round_id: int = 0, attempt: int = 0) -> float:
+        g = _rng(self.seed, self._SALT, worker_id, round_id, attempt)
+        median = self.mean_s * self.growth ** round_id
+        return float(median * math.exp(self.sigma * g.standard_normal()))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,12 +2,18 @@
 
 A *task* is one serverless invocation: derive the (worker, round) key, sketch,
 solve, return x̂_k. The builders here produce ``compute_fn(worker_id, round_id)``
-closures over one jitted kernel (compiled once, shared by every thread of the
-pool), reusing the exact solver stack of the synchronous path —
-``solve.sketch_and_solve`` with the fused single-pass sketch→Gram pipeline by
-default — and the exact key schedule ``prng.worker_key(base_key, w, round)`` of
-the ``shard_map`` workers, so an async run and a mesh run with the same realized
-worker set agree to float tolerance.
+callables over one jitted kernel, reusing the exact solver stack of the
+synchronous path — ``solve.sketch_and_solve`` with the fused single-pass
+sketch→Gram pipeline by default — and the exact key schedule
+``prng.worker_key(base_key, w, round)`` of the ``shard_map`` workers, so an async
+run and a mesh run with the same realized worker set agree to float tolerance.
+
+The payloads are *picklable task specs* (plain classes over numpy state, the jit
+cache rebuilt lazily per process), which is what lets the ``process`` executor
+backend ship one payload to each worker process and submit bare
+``(worker_id, round_id)`` coordinates afterwards. On the thread/inline backends
+they behave exactly like the closures they replaced — the jitted solve is
+compiled once per payload and shared by every thread.
 
 Early-stop estimators (for ``RuntimeConfig.target_error``):
 
@@ -18,7 +24,6 @@ Early-stop estimators (for ``RuntimeConfig.target_error``):
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
@@ -26,9 +31,70 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketches as sk, solve, theory
-from repro.runtime.engine import RuntimeConfig, RuntimeResult, ServerlessEngine
+from repro.runtime.backends import ExecutorBackend
+from repro.runtime.engine import (
+    DeadlinePolicy,
+    RuntimeConfig,
+    RuntimeResult,
+    ServerlessEngine,
+)
 from repro.runtime.latency import LatencyModel
 from repro.utils import prng
+
+
+def _key_data(key) -> np.ndarray:
+    """Raw uint32 words of a jax PRNG key (legacy or typed) — picklable."""
+    try:
+        return np.asarray(key)
+    except TypeError:  # new-style typed key array
+        return np.asarray(jax.random.key_data(key))
+
+
+class _PicklableCompute:
+    """Base for process-shippable payloads: numpy state + a lazily built jit."""
+
+    def __init__(self, spec: sk.SketchSpec, base_key, A, b):
+        self.spec = spec
+        self.base_key = _key_data(base_key)
+        self.A = np.asarray(A)
+        self.b = np.asarray(b)
+        self._fn = None
+
+    def _build(self) -> Callable:
+        raise NotImplementedError
+
+    def __call__(self, worker_id: int, round_id: int) -> np.ndarray:
+        if self._fn is None:
+            self._fn = self._build()
+        wkey = prng.worker_key(jnp.asarray(self.base_key), worker_id, round_id)
+        return np.asarray(self._fn(wkey))
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_fn"] = None  # jit caches never cross process boundaries
+        return state
+
+
+class SketchSolveCompute(_PicklableCompute):
+    """One Algorithm-1 worker as a task spec: (worker, round) ↦ x̂ ∈ R^d."""
+
+    def __init__(self, spec, base_key, A, b, *, reg: float = 0.0, method: str = "fused"):
+        super().__init__(spec, base_key, A, b)
+        self.reg = float(reg)
+        self.method = str(method)
+
+    def _build(self):
+        A, b = jnp.asarray(self.A), jnp.asarray(self.b)
+        spec, reg, method = self.spec, self.reg, self.method
+        return jax.jit(lambda wkey: solve.sketch_and_solve(spec, wkey, A, b, reg=reg, method=method))
+
+
+class LeastNormCompute(_PicklableCompute):
+    """§V right-sketch worker (n < d) as a task spec."""
+
+    def _build(self):
+        A, b, spec = jnp.asarray(self.A), jnp.asarray(self.b), self.spec
+        return jax.jit(lambda wkey: solve.sketch_least_norm(spec, wkey, A, b))
 
 
 def make_sketch_solve_compute(
@@ -39,17 +105,9 @@ def make_sketch_solve_compute(
     *,
     reg: float = 0.0,
     method: str = "fused",
-) -> Callable[[int, int], np.ndarray]:
+) -> SketchSolveCompute:
     """One Algorithm-1 worker as a ``compute_fn``: (worker, round) ↦ x̂ ∈ R^d."""
-
-    @jax.jit
-    def _solve(wkey):
-        return solve.sketch_and_solve(spec, wkey, A, b, reg=reg, method=method)
-
-    def compute(worker_id: int, round_id: int) -> np.ndarray:
-        return np.asarray(_solve(prng.worker_key(base_key, worker_id, round_id)))
-
-    return compute
+    return SketchSolveCompute(spec, base_key, A, b, reg=reg, method=method)
 
 
 def make_least_norm_compute(
@@ -57,17 +115,9 @@ def make_least_norm_compute(
     base_key: jax.Array,
     A: jax.Array,
     b: jax.Array,
-) -> Callable[[int, int], np.ndarray]:
+) -> LeastNormCompute:
     """§V right-sketch worker (n < d) as a ``compute_fn``."""
-
-    @jax.jit
-    def _solve(wkey):
-        return solve.sketch_least_norm(spec, wkey, A, b)
-
-    def compute(worker_id: int, round_id: int) -> np.ndarray:
-        return np.asarray(_solve(prng.worker_key(base_key, worker_id, round_id)))
-
-    return compute
+    return LeastNormCompute(spec, base_key, A, b)
 
 
 # ----------------------------------------------------------------- error estimators
@@ -114,6 +164,24 @@ def subsample_probe(
     return A[idx], b[idx]
 
 
+def resolve_error_fn(
+    error_fn: Union[None, str, Callable[[np.ndarray, int], float]],
+    spec: sk.SketchSpec,
+    key: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    *,
+    probe_rows: int = 1024,
+) -> Optional[Callable[[np.ndarray, int], float]]:
+    """``"theory"`` / ``"probe"`` / callable / None → the engine's error callback."""
+    if error_fn == "theory":
+        return theory_error_fn(spec, A.shape[1])
+    if error_fn == "probe":
+        pk = jax.random.fold_in(key, 0x9B0BE)
+        return probe_error_fn(*subsample_probe(pk, A, b, rows=probe_rows))
+    return error_fn
+
+
 # ------------------------------------------------------------------- one-call driver
 
 
@@ -131,19 +199,18 @@ def serverless_sketch_solve(
     method: str = "fused",
     error_fn: Union[None, str, Callable[[np.ndarray, int], float]] = None,
     probe_rows: int = 1024,
+    backend: Union[None, str, ExecutorBackend] = None,
+    deadline: Union[None, float, DeadlinePolicy] = None,
 ) -> RuntimeResult:
     """Algorithm 1 on the async engine: ``rounds`` waves of ``q`` workers, averaged
     as they arrive. ``error_fn``: a callable, ``"theory"``, ``"probe"``, or None
     (None still runs every task; "theory"/"probe" also enable the early-stop
-    comparison when ``config.target_error`` is set).
+    comparison when ``config.target_error`` is set). ``backend`` selects the
+    executor (``"inline"``/``"thread"``/``"process"``, default ``config.backend``);
+    ``deadline`` an optional :class:`~repro.runtime.engine.DeadlinePolicy`.
     """
-    if error_fn == "theory":
-        error_fn = theory_error_fn(spec, A.shape[1])
-    elif error_fn == "probe":
-        pk = jax.random.fold_in(key, 0x9B0BE)
-        error_fn = probe_error_fn(*subsample_probe(pk, A, b, rows=probe_rows))
-
+    error_fn = resolve_error_fn(error_fn, spec, key, A, b, probe_rows=probe_rows)
     compute = make_sketch_solve_compute(spec, key, A, b, reg=reg, method=method)
     tasks: Sequence[Tuple[int, int]] = [(w, r) for r in range(rounds) for w in range(q)]
-    engine = ServerlessEngine(compute, latency, config)
+    engine = ServerlessEngine(compute, latency, config, backend=backend, deadline=deadline)
     return engine.run(tasks=tasks, error_fn=error_fn)

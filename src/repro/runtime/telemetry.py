@@ -9,7 +9,9 @@ Every state transition in the engine emits one :class:`Event`; the ordered list
   * the summary report subsumes ``HeartbeatMonitor.report()`` (same keys plus the
     p50 / retry / timeout extensions) by replaying arrivals into a monitor.
 
-Event kinds: ``dispatch`` | ``arrive`` | ``timeout`` | ``retry`` | ``cancel`` | ``stop``.
+Event kinds: ``dispatch`` | ``arrive`` | ``timeout`` | ``drop`` | ``retry`` |
+``cancel`` | ``stop`` — ``drop`` is the process backend's crash signal (a worker
+OS process died mid-task); it re-enters the same retry loop as ``timeout``.
 """
 from __future__ import annotations
 
@@ -98,7 +100,8 @@ class EventLog:
 
         Attempt-0 latencies form the wave the monitor scores against ``deadline``
         (hard drops enter as +inf runtimes, i.e. missed); retry/timeout events feed
-        the monitor's counters. The result is a strict superset of the pre-runtime
+        the monitor's counters, and worker crashes (``drop``) count as timeouts —
+        the monitor has no finer-grained bucket for a dead worker. The result is a strict superset of the pre-runtime
         ``HeartbeatMonitor.report()`` schema.
         """
         import numpy as np
@@ -111,7 +114,7 @@ class EventLog:
             if ev.attempt == 0 and ev.kind in ("arrive", "timeout") and 0 <= ev.worker_id < q:
                 lat = ev.extra.get("latency_s", np.inf)
                 wave[ev.worker_id] = min(wave[ev.worker_id], lat)
-            if ev.kind == "timeout":
+            if ev.kind in ("timeout", "drop"):
                 mon.record_timeout()
             if ev.kind == "retry":
                 mon.record_retry()
@@ -132,6 +135,7 @@ class EventLog:
             "effective_q": counts.get("arrive", 0),
             "retries": counts.get("retry", 0),
             "timeouts": counts.get("timeout", 0),
+            "drops": counts.get("drop", 0),
             "cancelled": counts.get("cancel", 0),
             "sim_makespan_s": self.events[-1].t if self.events else 0.0,
         }

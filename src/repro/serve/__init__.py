@@ -1,2 +1,4 @@
-"""Serving substrate: batched KV-cache engine over the decode step."""
-from repro.serve.engine import ServeConfig, Engine, sample_token
+"""Serving substrate: batched KV-cache LM engine + sketch-solve job admission."""
+from repro.serve.engine import Engine, ServeConfig, SolveJob, SolveServer, sample_token
+
+__all__ = ["Engine", "ServeConfig", "SolveJob", "SolveServer", "sample_token"]

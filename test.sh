@@ -6,6 +6,8 @@
 # makes the main process match, so mesh-building code paths see q > 1 too).
 #
 #   ./test.sh                 run the tier-1 pytest suite
+#   ./test.sh --fast          inner-loop tier: deselect `slow` / `subprocess`
+#                             marked tests (spawned pools, python -c meshes)
 #   ./test.sh --bench-smoke   run every benchmark at one tiny shape (kernel /
 #                             perf-path regressions fail loudly here instead of
 #                             only showing up in the JSON summaries)
@@ -18,6 +20,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     exec python -m benchmarks.run --smoke "$@"
+fi
+
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    exec python -m pytest -x -q -m "not slow and not subprocess" "$@"
 fi
 
 exec python -m pytest -x -q "$@"

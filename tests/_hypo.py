@@ -1,0 +1,114 @@
+"""Property-testing front end: real hypothesis when installed, a deterministic
+fallback otherwise.
+
+The test image does not ship ``hypothesis`` (it is the optional ``test`` extra in
+``pyproject.toml``), but the property tests in ``test_properties.py`` still have
+to *run* — gating them behind ``importorskip`` silently dropped a whole test
+layer. This shim keeps one import line working either way::
+
+    from _hypo import given, settings, st
+
+When hypothesis is importable those names are hypothesis's own. Otherwise the
+fallback below draws ``max_examples`` pseudo-random examples per test from a
+numpy Philox generator seeded by the test's qualified name — deterministic across
+runs and machines (no ``PYTHONHASHSEED`` dependence), shrinking-free but loud on
+failure (the failing example's kwargs are attached to the assertion message).
+
+Only the strategy surface the suite uses is implemented: ``integers``,
+``sampled_from``, ``lists``, ``tuples``, ``floats``, ``booleans``.
+"""
+from __future__ import annotations
+
+import hashlib
+
+try:  # pragma: no cover - exercised only on images with the `test` extra
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        """The subset of ``hypothesis.strategies`` the test suite draws from."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(values):
+            values = list(values)
+            return _Strategy(lambda rng: values[int(rng.integers(len(values)))])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(min_value + (max_value - min_value) * rng.random())
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(size)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        """Decorator form only (the way the suite uses it): records the example
+        budget on the (already ``given``-wrapped) test function."""
+
+        def apply(fn):
+            fn._hypo_max_examples = int(max_examples)
+            return fn
+
+        return apply
+
+    def given(**strategies):
+        """Run the test once per drawn example. The RNG is seeded from the test's
+        qualname, so every run (and every machine) sees the same examples."""
+
+        def decorate(fn):
+            # no functools.wraps: copying __wrapped__ would make pytest inspect
+            # the original signature and demand the drawn names as fixtures
+            def wrapper(*args, **kwargs):
+                digest = hashlib.sha256(fn.__qualname__.encode()).digest()
+                rng = np.random.default_rng(
+                    np.random.Philox(int.from_bytes(digest[:8], "little"))
+                )
+                n = getattr(wrapper, "_hypo_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    drawn = {name: s.sample(rng) for name, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # attach the failing example, no shrinking
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n}): {drawn!r}"
+                        ) from e
+
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(wrapper, attr, getattr(fn, attr))
+            return wrapper
+
+        return decorate

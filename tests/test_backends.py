@@ -1,0 +1,139 @@
+"""Executor backend layer: crash fault-injection, pickling, factory contracts.
+
+The process-backend tests SIGKILL real worker processes via
+:class:`repro.runtime.backends.KillSwitch` and pin the recovery story end to end:
+a killed worker surfaces as a ``drop`` event, re-enters deadline→backoff→retry
+with a fresh round-folded key, and innocent pool-mates (whose futures the broken
+pool also poisoned) are transparently re-run and never appear in the event log.
+"""
+import pickle
+
+import jax
+import numpy as np
+import pytest
+
+from repro import runtime as rt
+from repro.core import sketches as sk, solve
+from repro.utils import prng
+
+
+def _toy_problem(n=256, d=8):
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, d))
+    b = A @ jax.random.normal(jax.random.PRNGKey(1), (d,)) + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(2), (n,)
+    )
+    return key, A, b
+
+
+# ------------------------------------------------------------------ quick (no pools)
+
+
+def test_make_backend_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown backend"):
+        rt.make_backend("quantum", lambda w, r: np.zeros(2))
+
+
+def test_make_backend_passes_instances_through():
+    inline = rt.InlineBackend(lambda w, r: np.zeros(2))
+    assert rt.make_backend(inline, lambda w, r: np.ones(2)) is inline
+    assert set(rt.BACKENDS) == {"inline", "thread", "process"}
+
+
+def test_sketch_solve_compute_pickle_roundtrip():
+    """The process backend ships the compute by pickle; the clone must produce
+    bitwise-identical results (numpy state, jit rebuilt lazily on the far side)."""
+    key, A, b = _toy_problem()
+    compute = rt.make_sketch_solve_compute(sk.SketchSpec("gaussian", 64), key, A, b)
+    clone = pickle.loads(pickle.dumps(compute))
+    np.testing.assert_array_equal(compute(1, 0), clone(1, 0))
+    np.testing.assert_array_equal(compute(0, 3), clone(0, 3))
+
+
+def test_least_norm_compute_pickle_roundtrip():
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (8, 64))  # n < d: the §V right-sketch regime
+    b = jax.random.normal(jax.random.PRNGKey(1), (8,))
+    compute = rt.make_least_norm_compute(sk.SketchSpec("gaussian", 32), key, A, b)
+    clone = pickle.loads(pickle.dumps(compute))
+    np.testing.assert_array_equal(compute(2, 1), clone(2, 1))
+
+
+def test_kill_switch_refuses_to_kill_master():
+    """On inline/thread the task runs in the master process — KillSwitch must
+    refuse rather than SIGKILL the test runner."""
+    ks = rt.KillSwitch(inner=lambda w, r: np.zeros(2), kill_coords=((0, 0),))
+    with pytest.raises(RuntimeError, match="master process"):
+        ks(0, 0)
+    np.testing.assert_array_equal(ks(1, 0), np.zeros(2))  # non-matching coords run
+
+
+# --------------------------------------------------------- crash → drop → retry
+
+
+def _kill_engine(kill_coords, *, q=2, max_retries=2, latency_seed=0):
+    key, A, b = _toy_problem()
+    spec = sk.SketchSpec("gaussian", 64)
+    compute = rt.KillSwitch(
+        inner=rt.make_sketch_solve_compute(spec, key, A, b), kill_coords=kill_coords
+    )
+    cfg = rt.RuntimeConfig(
+        deadline_s=1.0, max_retries=max_retries, backoff_base_s=0.05, max_threads=2
+    )
+    lat = rt.ConstantLatency(seed=latency_seed, value_s=0.1)
+    eng = rt.ServerlessEngine(compute, lat, cfg, backend="process")
+    return key, A, b, spec, eng
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_process_crash_drops_then_retries_with_fresh_key():
+    """SIGKILL at (worker 0, round 0): the engine hears a drop, retries with a
+    fresh round id, and the retry lands — the acceptance scenario."""
+    key, A, b, spec, eng = _kill_engine(kill_coords=((0, 0),))
+    res = eng.run(q=2)
+
+    counts = res.events.counts()
+    assert counts.get("drop", 0) == 1
+    assert counts.get("retry", 0) == 1
+    assert counts.get("timeout", 0) == 0
+    assert res.count == 2 and res.dispatched == 3
+    # the innocent pool-mate (worker 1) arrived normally, untouched by the crash
+    assert (1, 0, 0) in res.arrived
+    drops = [ev for ev in res.events if ev.kind == "drop"]
+    assert [(ev.worker_id, ev.round_id) for ev in drops] == [(0, 0)]
+    # the retry carries a *fresh* round (never a replay of the killed coordinate)
+    assert (0, 1, 1) in res.arrived
+    assert res.summary(deadline=1.0)["drops"] == 1
+
+    # x̄ is the plain mean over exactly the arrived (worker, round) keys
+    xs = np.stack(
+        [
+            np.asarray(solve.sketch_and_solve(spec, prng.worker_key(key, w, r), A, b))
+            for (w, r, _) in res.arrived
+        ]
+    )
+    np.testing.assert_allclose(res.xbar, xs.mean(0), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_process_crash_without_retry_budget_just_drops():
+    """max_retries=0: the crashed task is simply lost; the average is over the
+    survivors and realized_mask records who made it."""
+    _, _, _, _, eng = _kill_engine(kill_coords=((0, 0),), max_retries=0)
+    res = eng.run(q=2)
+    assert res.count == 1
+    assert res.events.counts().get("drop", 0) == 1
+    assert "retry" not in res.events.counts()
+    np.testing.assert_array_equal(res.realized_mask, np.asarray([0.0, 1.0], np.float32))
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_process_repeated_crashes_exhaust_budget_and_raise():
+    """A task whose every attempt is killed (rounds 0,1,2 for worker 0 with
+    q=1) exhausts max_retries and, with no other workers, x̄ is undefined."""
+    _, _, _, _, eng = _kill_engine(kill_coords=((0, 0), (0, 1), (0, 2)), q=1)
+    with pytest.raises(RuntimeError, match="no worker result"):
+        eng.run(q=1)

@@ -171,6 +171,7 @@ def _run_subprocess(body: str, devices: int = 8, timeout: int = 900) -> str:
     return out.stdout
 
 
+@pytest.mark.subprocess
 def test_apply_batched_mesh_matches_loop_bitwise():
     """shard_map-over-mesh apply_batched == the loop fallback, bitwise, under the
     same worker keys (each shard runs a lax.map over its block of keys — the exact
@@ -199,6 +200,7 @@ def test_apply_batched_mesh_matches_loop_bitwise():
     )
 
 
+@pytest.mark.subprocess
 def test_gram_batched_mesh_matches_loop():
     """Mesh-parallel gram_batched (what master-sketch mode ships) == loop path."""
     _run_subprocess(

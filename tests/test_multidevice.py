@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.subprocess  # every test here shells out to a fresh mesh
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

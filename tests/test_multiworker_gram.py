@@ -185,6 +185,7 @@ def _run_subprocess(body: str, env_extra: dict, timeout: int = 900) -> str:
     return out.stdout
 
 
+@pytest.mark.subprocess
 def test_reduced_rounds_env_knob():
     """REPRO_RNG_ROUNDS=8 (resolved at trace time, hence the subprocess): the
     gaussian kernel and jnp paths stay mutually consistent — they share the
@@ -213,6 +214,7 @@ def test_reduced_rounds_env_knob():
     assert "ROUNDS8_OK" in out
 
 
+@pytest.mark.subprocess
 def test_invalid_rounds_rejected():
     out = _run_subprocess(
         """

@@ -1,11 +1,14 @@
-"""Hypothesis property tests on system invariants."""
+"""Property tests on system invariants.
+
+Runs under real hypothesis when installed (the ``test`` extra) and under the
+deterministic fallback in ``tests/_hypo.py`` otherwise — never skipped.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import averaging, privacy, sketches as sk
 from repro.kernels import common as kcommon
@@ -14,6 +17,9 @@ from repro.utils import tree as tu
 
 jax.config.update("jax_enable_x64", False)
 FAST = settings(max_examples=20, deadline=None)
+
+# ~a minute of many-shape jit compiles: tier-1 runs it, test.sh --fast skips it
+pytestmark = pytest.mark.slow
 
 
 @FAST
@@ -124,6 +130,52 @@ def test_ring_slot_invariants(pos, s_cache):
     v = np.asarray(valid)
     assert (k_pos[v] > pos - s_cache).all() and (k_pos[v] <= pos).all()
     assert (k_pos[~v] < 0).all()
+
+
+@FAST
+@given(
+    lats=st.lists(
+        st.sampled_from([0.05, 0.1, 0.3, 0.5, 1.0, 2.0, 5.0]), min_size=0, max_size=32
+    ),
+    scale=st.sampled_from([1.0, 1.5, 3.0, 10.0]),
+)
+def test_adaptive_deadline_monotone_and_clamped(lats, scale):
+    """The adaptive deadline is monotone in the observed latencies (scaling every
+    sample up can only raise it) and always inside [min_s, max_s]; before
+    min_samples observations the clamped warm-up default applies."""
+    from repro.runtime.engine import AdaptiveDeadline
+
+    pol = AdaptiveDeadline(warmup_s=1.0, min_samples=5, window=64, min_s=0.2, max_s=4.0)
+    tr, tr_scaled = pol.start(), pol.start()
+    for v in lats:
+        tr.observe(v)
+        tr_scaled.observe(v * scale)
+    d, d_scaled = tr.current(), tr_scaled.current()
+    assert pol.min_s <= d <= pol.max_s
+    assert pol.min_s <= d_scaled <= pol.max_s
+    if len(lats) < pol.min_samples:
+        assert d == d_scaled == min(max(pol.warmup_s, pol.min_s), pol.max_s)
+    else:
+        assert d_scaled >= d - 1e-12
+
+
+@FAST
+@given(k=st.integers(0, 12), start=st.sampled_from([0.1, 0.5, 2.0]))
+def test_adaptive_deadline_timeout_escalation(k, start):
+    """Censored observations (timeouts) never shrink the deadline: feeding back
+    each current deadline as a timeout produces a non-decreasing sequence."""
+    from repro.runtime.engine import AdaptiveDeadline
+
+    pol = AdaptiveDeadline(
+        warmup_s=start, min_samples=1, margin=1.0, timeout_factor=1.5, max_s=50.0
+    )
+    tr = pol.start()
+    prev = tr.current()
+    for _ in range(k):
+        tr.observe_timeout(prev)
+        cur = tr.current()
+        assert cur >= prev - 1e-12
+        prev = cur
 
 
 @FAST

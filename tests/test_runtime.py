@@ -1,5 +1,6 @@
 """Runtime subsystem: deterministic replay, retries, early stop, mask equivalence,
-all-straggler contract, multiround trace hoisting, trainer delegation."""
+all-straggler contract, multiround trace hoisting, trainer delegation, and the
+cross-backend determinism contract (inline == thread == process, any pool width)."""
 import os
 import subprocess
 import sys
@@ -180,9 +181,156 @@ def test_engine_summary_and_error_trace():
     assert hb["effective_q"] == 8.0 and "p50_runtime" in hb
 
 
+# ------------------------------------------------------------ executor backends
+
+
+def _backend_scenario():
+    """A run with drops, timeouts, and retries — the kind of schedule where a
+    backend that leaked wall-clock ordering into the event log would diverge."""
+    key, A, b = _toy_problem()
+    spec = sk.SketchSpec("gaussian", 64)
+    lat = rt.DropLatency(
+        seed=23, inner=rt.LognormalLatency(seed=23, mean_s=0.4, sigma=0.6), drop_prob=0.2
+    )
+    return key, A, b, spec, lat
+
+
+def test_backend_inline_matches_thread():
+    """Same seed ⇒ byte-identical event log + bitwise x̄ on inline vs thread."""
+    key, A, b, spec, lat = _backend_scenario()
+    cfg = rt.RuntimeConfig(deadline_s=0.5, max_retries=2, backoff_base_s=0.05)
+    runs = {
+        kind: rt.serverless_sketch_solve(
+            spec, key, A, b, q=8, latency=lat, config=cfg, backend=kind
+        )
+        for kind in ("inline", "thread")
+    }
+    assert runs["inline"].events.lines() == runs["thread"].events.lines()
+    np.testing.assert_array_equal(runs["inline"].xbar, runs["thread"].xbar)
+    assert runs["inline"].arrived == runs["thread"].arrived
+
+
+def test_backend_thread_pool_width_is_invisible():
+    """Event order comes from the simulated clock, never thread scheduling: a
+    1-wide and an 8-wide pool replay the identical run."""
+    key, A, b, spec, lat = _backend_scenario()
+    runs = [
+        rt.serverless_sketch_solve(
+            spec, key, A, b, q=8, latency=lat,
+            config=rt.RuntimeConfig(
+                deadline_s=0.5, max_retries=2, backoff_base_s=0.05, max_threads=width
+            ),
+        )
+        for width in (1, 8)
+    ]
+    assert runs[0].events.lines() == runs[1].events.lines()
+    np.testing.assert_array_equal(runs[0].xbar, runs[1].xbar)
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_backend_process_matches_inline_across_pool_sizes():
+    """The process backend (real OS worker processes, spawn) replays the same
+    bytes as inline, for 1- and 2-wide pools — the acceptance contract."""
+    key, A, b, spec, lat = _backend_scenario()
+    cfg = rt.RuntimeConfig(deadline_s=0.5, max_retries=2, backoff_base_s=0.05)
+    ref = rt.serverless_sketch_solve(
+        spec, key, A, b, q=8, latency=lat, config=cfg, backend="inline"
+    )
+    import dataclasses
+
+    for width in (1, 2):
+        res = rt.serverless_sketch_solve(
+            spec, key, A, b, q=8, latency=lat,
+            config=dataclasses.replace(cfg, max_threads=width), backend="process",
+        )
+        assert res.events.lines() == ref.events.lines(), f"pool width {width}"
+        np.testing.assert_array_equal(res.xbar, ref.xbar)
+
+
+def test_engine_reuses_caller_owned_backend_instance():
+    """An ExecutorBackend instance passes through make_backend untouched and the
+    engine never shuts it down — it survives (and replays across) multiple runs."""
+    key, A, b, spec, lat = _backend_scenario()
+    compute = rt.make_sketch_solve_compute(spec, key, A, b)
+    shared = rt.ThreadBackend(compute, max_workers=2)
+    assert rt.make_backend(shared, compute) is shared
+    cfg = rt.RuntimeConfig(deadline_s=0.5, max_retries=1)
+    eng = rt.ServerlessEngine(compute, lat, cfg, backend=shared)
+    a, bb = eng.run(q=4), eng.run(q=4)
+    assert a.events.lines() == bb.events.lines()
+    shared.shutdown()
+
+
+# ---------------------------------------------------------- adaptive deadlines
+
+
+def test_adaptive_deadline_recovers_from_misset_static():
+    """A static deadline below the latency median burns its retry budget on
+    timeouts; the adaptive policy reads the timeout stream, escalates past the
+    median, and lands strictly more results with fewer timeouts."""
+    key, A, b = _toy_problem()
+    spec = sk.SketchSpec("gaussian", 64)
+    lat = rt.LognormalLatency(seed=11, mean_s=1.0, sigma=0.4)
+    cfg = rt.RuntimeConfig(deadline_s=0.6, max_retries=3, backoff_base_s=0.05)
+    static = rt.serverless_sketch_solve(spec, key, A, b, q=8, latency=lat, config=cfg)
+    adaptive = [
+        rt.serverless_sketch_solve(
+            spec, key, A, b, q=8, latency=lat, config=cfg,
+            deadline=rt.AdaptiveDeadline(warmup_s=0.6, min_samples=3),
+        )
+        for _ in range(2)
+    ]
+    assert adaptive[0].count > static.count
+    assert (
+        adaptive[0].events.counts().get("timeout", 0)
+        < static.events.counts().get("timeout", 0)
+    )
+    # the adaptive tracker sits inside the replay loop: still fully deterministic
+    assert adaptive[0].events.lines() == adaptive[1].events.lines()
+    np.testing.assert_array_equal(adaptive[0].xbar, adaptive[1].xbar)
+    # dispatch events carry the effective deadline; retries escalate beyond warmup
+    dls = [
+        ev.extra["deadline_s"]
+        for ev in adaptive[0].events
+        if ev.kind == "dispatch" and ev.attempt > 0
+    ]
+    assert dls and max(dls) > 0.6
+
+
+def test_deadline_policy_resolution_and_float_shorthand():
+    cfg = rt.RuntimeConfig(deadline_s=0.7)
+    assert rt.resolve_deadline_policy(None, cfg).start().current() == 0.7
+    assert rt.resolve_deadline_policy(1.3, cfg).start().current() == 1.3
+    pol = rt.AdaptiveDeadline(warmup_s=2.0)
+    assert rt.resolve_deadline_policy(pol, cfg) is pol
+    assert pol.start().current() == 2.0  # warm-up before min_samples
+
+
+def test_straggler_policy_bridges_to_deadline_policy():
+    from repro.distributed.fault_tolerance import StragglerPolicy
+
+    pol = StragglerPolicy(deadline_quantile=0.8, seed=0)
+    static = pol.to_deadline_policy(mean_s=1.0, sigma=0.35)
+    assert isinstance(static, rt.StaticDeadline)
+    expected = rt.LognormalLatency(mean_s=1.0, sigma=0.35).quantile(0.8)
+    assert static.deadline_s == pytest.approx(expected)
+    adaptive = pol.to_deadline_policy(mean_s=1.0, sigma=0.35, adaptive=True)
+    assert isinstance(adaptive, rt.AdaptiveDeadline)
+    assert adaptive.warmup_s == pytest.approx(expected)
+    assert adaptive.quantile == 0.8
+    # keep-everyone policy: infinite static cutoff, finite adaptive warm-up
+    keep = StragglerPolicy(deadline_quantile=1.0)
+    import math
+
+    assert math.isinf(keep.to_deadline_policy().deadline_s)
+    assert math.isfinite(keep.to_deadline_policy(adaptive=True).warmup_s)
+
+
 # -------------------------------------------------- runtime vs synchronous mesh
 
 
+@pytest.mark.subprocess
 def test_runtime_matches_masked_distributed_solve():
     """Async run with latency injection == distributed_sketch_solve with the
     realized mask, for gaussian / sjlt / hybrid (subprocess: 8-device mesh)."""
