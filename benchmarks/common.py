@@ -9,19 +9,23 @@ from typing import Dict, List
 import jax
 import numpy as np
 
+from repro.analysis.annotations import sanctioned_wall_timer
+from repro.utils import env as envcfg
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 
 def smoke() -> bool:
     """True under `benchmarks.run --smoke` / `test.sh --bench-smoke`: every module
     shrinks to one tiny shape so the whole sweep finishes in CI time."""
-    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+    return bool(envcfg.read_bool("REPRO_BENCH_SMOKE", False))
 
 
 def block(x):
     return jax.block_until_ready(x)
 
 
+@sanctioned_wall_timer
 def timeit(fn, *args, repeat: int = 3):
     """Median wall seconds of fn(*args) after one warmup."""
     block(fn(*args))

@@ -29,15 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketches as sk, solve
-from benchmarks.common import RESULTS_DIR, block, print_table, write_csv
+from benchmarks.common import RESULTS_DIR, block, print_table, smoke as _smoke, write_csv
+from repro.analysis.annotations import sanctioned_wall_timer
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _smoke() -> bool:
-    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
-
-
+@sanctioned_wall_timer
 def _time_pair(fn_a, fn_b, repeat: int = 7):
     """Interleaved min-of-``repeat`` wall seconds for two thunks (after warmup)."""
     block(fn_a())
@@ -123,13 +121,13 @@ def _bench_mesh_srht(quick: bool) -> dict:
 
 
 def run(quick: bool = True):
-    key = jax.random.PRNGKey(0)
     repeat = 3 if _smoke() else 7
     rows = []
     summary = {"backend": jax.default_backend(), "shapes": {}}
 
-    for label, mk_spec, n, d, m, headline in _shapes(quick):
+    for i, (label, mk_spec, n, d, m, headline) in enumerate(_shapes(quick)):
         spec = mk_spec(m)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), i)
         A = jax.random.normal(key, (n, d), jnp.float32)
         b = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
         fused = jax.jit(lambda k, A, b, spec=spec: solve.sketch_and_solve(spec, k, A, b))

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import RESULTS_DIR, block, print_table, smoke, write_csv
+from repro.analysis.annotations import sanctioned_wall_timer
 from repro.utils import prng
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -40,6 +41,7 @@ FULL_SHAPE = dict(q=8, n=131072, d=256, m=1024)
 SMOKE_SHAPE = dict(q=4, n=4096, d=64, m=128)
 
 
+@sanctioned_wall_timer
 def _time(fn, repeat: int) -> float:
     block(fn())
     ts = []

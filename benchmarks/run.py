@@ -13,6 +13,8 @@ import sys
 import time
 import traceback
 
+from repro.analysis.annotations import sanctioned_wall_timer
+
 from benchmarks import (
     bias_bounds,
     fig1_airline,
@@ -52,6 +54,7 @@ MODULES = {
 }
 
 
+@sanctioned_wall_timer  # per-benchmark wall cost in the progress lines
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
@@ -67,9 +70,13 @@ def main(argv=None) -> int:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     keys = [k.strip() for k in args.only.split(",") if k.strip()] or list(MODULES)
-    unknown = [k for k in keys if k not in MODULES]
+    unknown = sorted(k for k in keys if k not in MODULES)
     if unknown:
-        print(f"unknown benchmark keys {unknown}; available: {sorted(MODULES)}")
+        print(
+            f"benchmarks.run: unknown benchmark key(s) {', '.join(unknown)}; "
+            f"registered keys: {', '.join(sorted(MODULES))}",
+            file=sys.stderr,
+        )
         return 2
     failures = []
     for k in keys:

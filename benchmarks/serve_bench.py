@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RESULTS_DIR, print_table, smoke, write_csv
+from repro.analysis.annotations import sanctioned_wall_timer
 from repro import runtime as rt
 from repro.core import sketches as sk, solve
 from repro.serve import SolveServer
@@ -49,6 +50,7 @@ def _rel_err(A, b, f_star, x) -> float:
     return (f - f_star) / max(f_star, 1e-30)
 
 
+@sanctioned_wall_timer  # measures real wall cost per backend for the identical simulated job
 def run(quick: bool = True):
     if smoke():
         n, d, m, q = 1024, 16, 128, 8

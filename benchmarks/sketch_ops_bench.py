@@ -27,10 +27,12 @@ import numpy as np
 
 from repro.core import operators as ops, sketches as sk
 from benchmarks.common import RESULTS_DIR, block, print_table, timeit, write_csv
+from repro.analysis.annotations import sanctioned_wall_timer
 
 Q = 8
 
 
+@sanctioned_wall_timer
 def _time_pair(fn_a, fn_b, repeat: int = 15):
     """Interleaved min-of-``repeat`` wall seconds for two thunks (after warmup)."""
     block(fn_a())

@@ -1,0 +1,42 @@
+"""repro.analysis — "reprolint", the AST lint engine for this repo's contracts.
+
+The paper's guarantees are runtime *conventions* in this codebase: fresh
+``fold_in``-derived keys before every sketch (privacy/unbiasedness), simulated-
+clock-only event ordering in the runtime (same seed ⇒ byte-identical logs),
+picklable numpy-state task specs (process backend), and tracer-safe Pallas/jit
+bodies. This package machine-checks them:
+
+    python -m repro.analysis src tests benchmarks
+    repro-lint --list-rules
+
+Five rules: ``rng-key-reuse``, ``wallclock-in-runtime``, ``trace-hazard``,
+``env-read-in-trace``, ``unpicklable-task-spec``. Per-line suppressions
+(``# reprolint: disable=<rule>``), a committed baseline for grandfathered
+findings (``reprolint-baseline.json``), text/JSON reporters.
+
+Stdlib-only on purpose: the lint tier runs without importing jax.
+"""
+from repro.analysis.annotations import sanctioned_wall_timer
+from repro.analysis.baseline import BASELINE_FILENAME, Baseline
+from repro.analysis.engine import Report, analyze_source, check_module, collect_files, run
+from repro.analysis.registry import Finding, Rule, all_rules, register, rule_names
+from repro.analysis.walker import Module, parse_file, parse_source
+
+__all__ = [
+    "BASELINE_FILENAME",
+    "Baseline",
+    "Finding",
+    "Module",
+    "Report",
+    "Rule",
+    "all_rules",
+    "analyze_source",
+    "check_module",
+    "collect_files",
+    "parse_file",
+    "parse_source",
+    "register",
+    "rule_names",
+    "run",
+    "sanctioned_wall_timer",
+]

@@ -1,0 +1,4 @@
+"""``python -m repro.analysis`` — the reprolint CLI."""
+from repro.analysis.cli import main
+
+raise SystemExit(main())

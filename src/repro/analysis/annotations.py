@@ -1,0 +1,29 @@
+"""Source annotations the rules recognize.
+
+These are *markers*: they change nothing at runtime beyond an attribute, but the
+static rules key off their (resolved) names. Keeping them importable costs
+nothing — launch/benchmark code imports the decorator for real so refactors that
+rename it break loudly instead of silently detaching the allowlist.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+#: Resolved decorator name the ``wallclock-in-runtime`` rule honors.
+SANCTIONED_WALL_TIMER = "sanctioned_wall_timer"
+
+
+def sanctioned_wall_timer(fn: F) -> F:
+    """Allowlist ``fn`` as a sanctioned wall-cost timer.
+
+    Launch entry points and benchmarks legitimately measure *wall cost* — how long
+    the hardware took — and report it to a human. That is the only sanctioned use
+    of wall-clock reads, and only under ``launch/`` and ``benchmarks/``: inside
+    ``runtime/``, ``serve/`` or ``core/`` a wall-clock read can leak into event
+    *ordering* and break the same-seed ⇒ byte-identical-log guarantee, so the rule
+    ignores this decorator there (fix the code or baseline it, don't sanction it).
+    """
+    fn.__reprolint_wall_timer__ = True
+    return fn

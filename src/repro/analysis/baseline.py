@@ -1,0 +1,89 @@
+"""Committed baseline of grandfathered findings.
+
+The baseline lets the lint gate be adopted on a tree with pre-existing findings:
+everything recorded in the baseline file passes, anything *new* fails. Entries
+are fingerprinted by ``(rule, path, stripped source line)`` rather than line
+number, so unrelated edits that shift a grandfathered finding up or down do not
+break the gate; duplicate fingerprints are counted, so adding a *second* copy of
+a baselined bug still fails.
+
+Workflow:
+    python -m repro.analysis src --write-baseline    # grandfather current findings
+    git add reprolint-baseline.json
+
+The goal state is an empty baseline — fix findings and re-write it shrinking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.registry import Finding
+
+BASELINE_FILENAME = "reprolint-baseline.json"
+_SCHEMA_VERSION = 1
+
+_Key = Tuple[str, str, str]  # (rule, path, snippet)
+
+
+def _key(finding: Finding, snippet: str) -> _Key:
+    return (finding.rule, finding.path, snippet)
+
+
+@dataclasses.dataclass
+class Baseline:
+    """A multiset of grandfathered finding fingerprints."""
+
+    counts: Counter = dataclasses.field(default_factory=Counter)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        """Load from ``path``; a missing file is an empty baseline."""
+        try:
+            with open(path, encoding="utf-8") as f:
+                data = json.load(f)
+        except FileNotFoundError:
+            return cls()
+        if not isinstance(data, dict) or "entries" not in data:
+            raise ValueError(f"{path} is not a reprolint baseline file")
+        counts: Counter = Counter()
+        for e in data["entries"]:
+            counts[(e["rule"], e["path"], e["snippet"])] += int(e.get("count", 1))
+        return cls(counts=counts)
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding], snippets: Dict[Finding, str]) -> "Baseline":
+        counts: Counter = Counter()
+        for f in findings:
+            counts[_key(f, snippets.get(f, ""))] += 1
+        return cls(counts=counts)
+
+    def save(self, path: str) -> None:
+        entries = [
+            {"rule": rule, "path": fpath, "snippet": snippet, "count": count}
+            for (rule, fpath, snippet), count in sorted(self.counts.items())
+        ]
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump({"version": _SCHEMA_VERSION, "entries": entries}, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    def split(
+        self, findings: List[Finding], snippets: Dict[Finding, str]
+    ) -> Tuple[List[Finding], List[Finding]]:
+        """Partition ``findings`` into (new, grandfathered) against this baseline."""
+        remaining = Counter(self.counts)
+        new: List[Finding] = []
+        old: List[Finding] = []
+        for f in findings:
+            k = _key(f, snippets.get(f, ""))
+            if remaining[k] > 0:
+                remaining[k] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        return new, old
+
+    def __len__(self) -> int:
+        return sum(self.counts.values())

@@ -1,0 +1,119 @@
+"""reprolint CLI.
+
+    python -m repro.analysis [paths ...]        # default: src tests benchmarks
+    repro-lint src --json
+    repro-lint src --write-baseline             # grandfather current findings
+    repro-lint --list-rules
+
+Exit codes: 0 clean (everything suppressed/baselined), 1 new findings,
+2 usage or parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.baseline import BASELINE_FILENAME, Baseline
+from repro.analysis.engine import run
+from repro.analysis.registry import all_rules
+from repro.analysis.reporters import json_report, text_report
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST lint for the RNG-privacy, determinism, and kernel/pickle contracts",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help=f"files/directories to analyze (default: the existing ones of {' '.join(DEFAULT_PATHS)})",
+    )
+    ap.add_argument("--json", action="store_true", help="machine-readable report")
+    ap.add_argument(
+        "--baseline",
+        default=BASELINE_FILENAME,
+        help=f"baseline file of grandfathered findings (default {BASELINE_FILENAME})",
+    )
+    ap.add_argument("--no-baseline", action="store_true", help="ignore the baseline file")
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="record every current finding into the baseline file and exit 0",
+    )
+    ap.add_argument(
+        "--select",
+        default="",
+        help="comma-separated subset of rules to run (default: all)",
+    )
+    ap.add_argument("--list-rules", action="store_true", help="print the rule table and exit")
+    ap.add_argument(
+        "--show-baselined",
+        action="store_true",
+        help="also print grandfathered findings in the text report",
+    )
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.name}\n    {rule.description}")
+        return 0
+
+    select = [r.strip() for r in args.select.split(",") if r.strip()] or None
+    try:
+        if select:
+            all_rules(select)  # validate early for a clean error
+    except KeyError as e:
+        print(f"repro-lint: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+    if not paths:
+        print("repro-lint: no paths given and none of the defaults exist", file=sys.stderr)
+        return 2
+
+    baseline = Baseline() if args.no_baseline else Baseline.load(args.baseline)
+    report = run(paths, rules=select, baseline=Baseline() if args.write_baseline else baseline)
+
+    for err in report.parse_errors:
+        print(f"repro-lint: parse error: {err}", file=sys.stderr)
+
+    if args.write_baseline:
+        findings = report.new + report.grandfathered
+        Baseline.from_findings(findings, report.snippets).save(args.baseline)
+        print(f"repro-lint: wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0 if not report.parse_errors else 2
+
+    if args.json:
+        print(
+            json_report(
+                report.new,
+                report.grandfathered,
+                files=report.files,
+                suppressed=report.suppressed,
+            )
+        )
+    else:
+        print(
+            text_report(
+                report.new,
+                report.grandfathered,
+                files=report.files,
+                suppressed=report.suppressed,
+                verbose_grandfathered=args.show_baselined,
+            )
+        )
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

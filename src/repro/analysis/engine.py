@@ -1,0 +1,111 @@
+"""Analyzer orchestration: collect files, run rules, apply suppressions + baseline."""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.baseline import Baseline
+from repro.analysis.registry import Finding, Rule, all_rules
+from repro.analysis.suppressions import is_suppressed, suppression_map
+from repro.analysis.walker import Module, parse_file, parse_source
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", ".claude"}
+
+
+def collect_files(paths: Sequence[str]) -> List[str]:
+    """Every ``.py`` file under the given files/directories, sorted, deduped."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS and not d.startswith("."))
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    out.append(os.path.join(root, name))
+    seen = set()
+    uniq = []
+    for f in out:
+        norm = f.replace(os.sep, "/")
+        if norm not in seen:
+            seen.add(norm)
+            uniq.append(norm)
+    return uniq
+
+
+def check_module(module: Module, rules: Iterable[Rule]) -> Tuple[List[Finding], int]:
+    """All non-suppressed findings for one module (deduped by location+rule),
+    plus the count of findings a suppression comment swallowed."""
+    raw: List[Finding] = []
+    for rule in rules:
+        raw.extend(rule.check(module))
+    raw = sorted(set(raw))
+    smap = suppression_map(module.source)
+    findings = [f for f in raw if not is_suppressed(f, smap)]
+    return findings, len(raw) - len(findings)
+
+
+def analyze_source(
+    source: str, path: str = "<snippet>", rules: Optional[Iterable[str]] = None
+) -> List[Finding]:
+    """Findings for one source string placed at a (possibly virtual) path —
+    the fixture-test entry point."""
+    module = parse_source(source, path)
+    findings, _ = check_module(module, all_rules(rules))
+    return findings
+
+
+@dataclasses.dataclass
+class Report:
+    """Result of one analyzer run over a file set."""
+
+    new: List[Finding]
+    grandfathered: List[Finding]
+    suppressed: int
+    files: int
+    parse_errors: List[str]
+    snippets: Dict[Finding, str]
+
+    @property
+    def exit_code(self) -> int:
+        if self.parse_errors:
+            return 2
+        return 1 if self.new else 0
+
+
+def run(
+    paths: Sequence[str],
+    *,
+    rules: Optional[Iterable[str]] = None,
+    baseline: Optional[Baseline] = None,
+) -> Report:
+    """Analyze every ``.py`` under ``paths`` and split findings on the baseline."""
+    rule_objs = all_rules(rules)
+    findings: List[Finding] = []
+    snippets: Dict[Finding, str] = {}
+    suppressed = 0
+    parse_errors: List[str] = []
+    files = collect_files(paths)
+    for path in files:
+        try:
+            module = parse_file(path)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            parse_errors.append(f"{path}: {e}")
+            continue
+        found, nsup = check_module(module, rule_objs)
+        suppressed += nsup
+        for f in found:
+            snippets[f] = module.snippet(f.line)
+        findings.extend(found)
+    baseline = baseline or Baseline()
+    new, old = baseline.split(findings, snippets)
+    return Report(
+        new=new,
+        grandfathered=old,
+        suppressed=suppressed,
+        files=len(files),
+        parse_errors=parse_errors,
+        snippets=snippets,
+    )

@@ -1,0 +1,79 @@
+"""Rule registry and the Finding record.
+
+A rule is a class with a unique kebab-case ``name``, a one-line ``description``
+(shown by ``repro-lint --list-rules`` and in the README rule table), and a
+``check(module)`` generator yielding :class:`Finding`s. Registration happens at
+import time via the :func:`register` decorator; ``repro.analysis.rules``
+imports every rule module so :func:`all_rules` sees the full set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Iterator, List, Optional, Type
+
+from repro.analysis.walker import Module
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+class Rule:
+    """Base class; subclasses set ``name``/``description`` and implement check()."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: Module, node, message: str) -> Finding:
+        return Finding(
+            path=module.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            rule=self.name,
+            message=message,
+        )
+
+
+_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    if not cls.name:
+        raise ValueError(f"rule class {cls.__name__} must set a name")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate rule name {cls.name!r}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def all_rules(select: Optional[Iterable[str]] = None) -> List[Rule]:
+    """Instantiate every registered rule (or the ``select``ed subset, validated)."""
+    import repro.analysis.rules  # noqa: F401  — registers the built-in rules
+
+    if select is None:
+        names = sorted(_REGISTRY)
+    else:
+        names = list(select)
+        unknown = [n for n in names if n not in _REGISTRY]
+        if unknown:
+            raise KeyError(f"unknown rule(s) {unknown}; available: {sorted(_REGISTRY)}")
+    return [_REGISTRY[n]() for n in names]
+
+
+def rule_names() -> List[str]:
+    import repro.analysis.rules  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,53 @@
+"""Finding reporters: human text and machine JSON."""
+from __future__ import annotations
+
+import json
+from typing import List
+
+from repro.analysis.registry import Finding
+
+
+def text_report(
+    new: List[Finding],
+    grandfathered: List[Finding],
+    *,
+    files: int,
+    suppressed: int,
+    verbose_grandfathered: bool = False,
+) -> str:
+    lines = [f.format() for f in sorted(new)]
+    if verbose_grandfathered:
+        lines += [f.format() + "  (baselined)" for f in sorted(grandfathered)]
+    tail = (
+        f"reprolint: {len(new)} finding(s) in {files} file(s)"
+        f" ({len(grandfathered)} baselined, {suppressed} suppressed)"
+    )
+    if not new:
+        tail = f"reprolint: clean — {files} file(s)" + (
+            f" ({len(grandfathered)} baselined, {suppressed} suppressed)"
+            if grandfathered or suppressed
+            else ""
+        )
+    lines.append(tail)
+    return "\n".join(lines)
+
+
+def json_report(
+    new: List[Finding],
+    grandfathered: List[Finding],
+    *,
+    files: int,
+    suppressed: int,
+) -> str:
+    def rec(f: Finding) -> dict:
+        return {"path": f.path, "line": f.line, "col": f.col, "rule": f.rule, "message": f.message}
+
+    return json.dumps(
+        {
+            "files": files,
+            "suppressed": suppressed,
+            "new": [rec(f) for f in sorted(new)],
+            "grandfathered": [rec(f) for f in sorted(grandfathered)],
+        },
+        indent=1,
+    )

@@ -1,0 +1,2 @@
+"""Built-in reprolint rules — importing this package registers all of them."""
+from repro.analysis.rules import env, pickle_spec, rng, trace, wallclock  # noqa: F401

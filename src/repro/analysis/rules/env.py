@@ -1,0 +1,55 @@
+"""env-read-in-trace — all env reads go through the sanctioned surface.
+
+Several knobs (``REPRO_RNG_ROUNDS``, ``REPRO_PALLAS_INTERPRET``,
+``REPRO_MESH_BATCH``) are resolved at *trace time*: whatever value the
+environment holds when a function first traces is baked into the jit cache for
+the life of the process. An ad-hoc ``os.environ.get`` buried in library code
+makes that capture invisible and unvalidated. ``repro.utils.env`` is the single
+sanctioned read surface — it validates (bad ints/bools raise a ValueError naming
+the variable) and keeps every trace-time resolution point auditable in one file.
+
+Scope: every file under ``repro/`` except ``repro/utils/env.py`` itself.
+*Writes* (``os.environ["X"] = ...``) are allowed — launchers legitimately
+configure XLA before importing jax; only reads are flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.registry import Finding, Rule, register
+from repro.analysis.walker import Module
+
+_READ_CALLS = {"os.getenv", "os.environ.get"}
+_ENVIRON = "os.environ"
+_SANCTIONED_SUFFIX = ("repro", "utils", "env.py")
+
+
+@register
+class EnvReadRule(Rule):
+    name = "env-read-in-trace"
+    description = (
+        "os.environ/os.getenv read outside repro.utils.env — env knobs resolve at "
+        "trace time and must go through the one validated, auditable surface"
+    )
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        if module.repro_subpackage is None:
+            return
+        if module.parts[-len(_SANCTIONED_SUFFIX) :] == _SANCTIONED_SUFFIX:
+            return
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                resolved = module.resolve_call(node)
+                if resolved in _READ_CALLS:
+                    yield self.finding(module, node, self._msg(resolved))
+            elif isinstance(node, ast.Subscript) and isinstance(node.ctx, ast.Load):
+                if module.resolve(node.value) == _ENVIRON:
+                    yield self.finding(module, node, self._msg("os.environ[...]"))
+
+    @staticmethod
+    def _msg(what: str) -> str:
+        return (
+            f"environment read `{what}` in library code — route it through "
+            "repro.utils.env (validated parsing, single trace-time surface)"
+        )

@@ -1,0 +1,142 @@
+"""unpicklable-task-spec — process-backend task specs must hold picklable state.
+
+The ``process`` executor backend ships one task-spec payload to each spawned
+worker via the pool initializer; from then on only bare ``(worker_id, round_id)``
+coordinates cross the boundary. That works because the specs follow the
+``runtime/tasks.py`` convention: plain classes over **numpy** state, with the jit
+cache rebuilt lazily per process (``_fn = None`` in ``__getstate__``). A lambda,
+a closure, a lock, or a ``jax.Array`` field silently breaks pickling — the
+failure shows up as a cryptic spawn-time crash on exactly the backend the tests
+exercise least.
+
+Detection: classes that subclass (transitively, within the module) a class named
+``_PicklableCompute``/``PicklableCompute``, or that carry a ``task_spec`` marker
+decorator. Inside their methods, ``self.x = <lambda>``, ``self.x = <local def>``,
+``self.x = threading.Lock()``-family, and ``self.x = jnp./jax. <call>`` are
+findings. ``np.asarray(...)`` fields are the sanctioned pattern.
+
+Scope: everywhere except ``tests/`` (fault-injection tests build deliberately
+broken specs).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.registry import Finding, Rule, register
+from repro.analysis.walker import Module
+
+_BASE_NAMES = {"_PicklableCompute", "PicklableCompute"}
+_MARKER_DECORATOR = "task_spec"
+_LOCK_CALLS = {
+    "threading.Lock",
+    "threading.RLock",
+    "threading.Event",
+    "threading.Condition",
+    "threading.Semaphore",
+    "threading.BoundedSemaphore",
+    "multiprocessing.Lock",
+    "multiprocessing.RLock",
+}
+_DEVICE_HEADS = ("jax.", "jnp.")
+
+
+def _base_names(cls: ast.ClassDef, module: Module) -> List[str]:
+    out = []
+    for b in cls.bases:
+        name = module.resolve(b)
+        if name:
+            out.append(name.split(".")[-1])
+    return out
+
+
+def _task_spec_classes(module: Module) -> List[ast.ClassDef]:
+    classes = [n for n in ast.walk(module.tree) if isinstance(n, ast.ClassDef)]
+    spec_names: Set[str] = set(_BASE_NAMES)
+    # transitive closure over module-local inheritance (tiny graphs; loop to fixpoint)
+    changed = True
+    while changed:
+        changed = False
+        for c in classes:
+            if c.name in spec_names:
+                continue
+            if any(b in spec_names for b in _base_names(c, module)):
+                spec_names.add(c.name)
+                changed = True
+    out = []
+    for c in classes:
+        marked = any(d.split(".")[-1] == _MARKER_DECORATOR for d in _decorators(c, module))
+        if marked or c.name in spec_names:
+            out.append(c)
+    return out
+
+
+def _decorators(cls: ast.ClassDef, module: Module) -> List[str]:
+    out = []
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = module.resolve(target)
+        if name:
+            out.append(name)
+    return out
+
+
+@register
+class UnpicklableTaskSpecRule(Rule):
+    name = "unpicklable-task-spec"
+    description = (
+        "process-backend task spec holds a lambda/closure/lock/jax.Array field — "
+        "specs must be numpy-state picklable (runtime/tasks.py convention)"
+    )
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        if module.is_test_code:
+            return
+        for cls in _task_spec_classes(module):
+            local_defs: Set[str] = set()
+            for method in cls.body:
+                if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                for stmt in ast.walk(method):
+                    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) and stmt is not method:
+                        local_defs.add(stmt.name)
+                for stmt in ast.walk(method):
+                    if not isinstance(stmt, ast.Assign):
+                        continue
+                    for target in stmt.targets:
+                        field = self._self_field(target)
+                        if field is None:
+                            continue
+                        why = self._offending(stmt.value, module, local_defs)
+                        if why:
+                            yield self.finding(
+                                module,
+                                stmt,
+                                f"task spec `{cls.name}` field `self.{field}` holds {why} — "
+                                "the process backend pickles specs; keep numpy state only "
+                                "and rebuild jits lazily (see runtime/tasks.py)",
+                            )
+
+    @staticmethod
+    def _self_field(target: ast.AST) -> str | None:
+        if (
+            isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == "self"
+        ):
+            return target.attr
+        return None
+
+    @staticmethod
+    def _offending(value: ast.AST, module: Module, local_defs: Set[str]) -> str | None:
+        if isinstance(value, ast.Lambda):
+            return "a lambda"
+        if isinstance(value, ast.Name) and value.id in local_defs:
+            return f"the local closure `{value.id}`"
+        if isinstance(value, ast.Call):
+            resolved = module.resolve_call(value) or ""
+            if resolved in _LOCK_CALLS:
+                return f"a `{resolved}` (unpicklable synchronization primitive)"
+            if resolved.startswith(_DEVICE_HEADS) or resolved in ("jax", "jnp"):
+                return f"a jax value (`{resolved}(...)`) — device arrays don't pickle"
+        return None

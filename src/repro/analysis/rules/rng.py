@@ -1,0 +1,293 @@
+"""rng-key-reuse — every sketch/draw consumes a fresh PRNG key.
+
+Paper guarantee this protects: **privacy and unbiasedness**. Both the (ε,δ)
+privacy argument and the Theorem-1 error decay require each worker, round, and
+retry to draw a **fresh i.i.d. sketch**: E[x̄] telescopes only over independent
+S_k, and reusing a key re-releases the *same* randomized projection — the
+privacy amplification from averaging q independent releases silently collapses.
+The repo's convention is ``fold_in``/``split`` before every draw
+(``prng.worker_key(base_key, w, round)``); this rule machine-checks it.
+
+Detection (per function scope, linear statement walk):
+
+  * *key variables*: names bound from ``jax.random.PRNGKey/key/fold_in/split``,
+    ``worker_key(s)``, or key-ish parameters (``key``, ``wkey``, ``rng``,
+    ``*_key``). Tuple-unpacking a ``split`` marks every target.
+  * *consumers*: ``jax.random.<sampler>`` calls and the sketch entry points
+    (``make_operator``, ``sketch_and_solve``, ``sketch_least_norm``, ``ihs``)
+    with a key variable passed bare.
+  * a second consumption of the same name with no intervening rebinding is a
+    finding. Loop bodies (and comprehensions) are walked twice, so a draw inside
+    a loop whose key isn't re-derived per iteration is caught as cross-iteration
+    reuse; ``if``/``else`` branches are walked independently (exclusive paths may
+    each consume the key once).
+
+Scope: everywhere except ``tests/`` (parity tests reuse keys on purpose;
+benchmark parity call sites use per-line suppressions instead, so the exceptions
+stay visible in the diff).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Union
+
+from repro.analysis.registry import Finding, Rule, register
+from repro.analysis.walker import Module
+
+SAMPLERS = {
+    "ball",
+    "bernoulli",
+    "beta",
+    "binomial",
+    "bits",
+    "categorical",
+    "cauchy",
+    "chisquare",
+    "choice",
+    "dirichlet",
+    "double_sided_maxwell",
+    "exponential",
+    "gamma",
+    "geometric",
+    "gumbel",
+    "laplace",
+    "loggamma",
+    "logistic",
+    "lognormal",
+    "maxwell",
+    "multivariate_normal",
+    "normal",
+    "orthogonal",
+    "pareto",
+    "permutation",
+    "poisson",
+    "rademacher",
+    "randint",
+    "rayleigh",
+    "t",
+    "truncated_normal",
+    "uniform",
+    "weibull_min",
+}
+
+#: sketch entry points that consume a key (draw S from it) — last dotted segment.
+SKETCH_CONSUMERS = {"make_operator", "sketch_and_solve", "sketch_least_norm", "ihs"}
+
+#: jax.random calls that *derive* keys instead of consuming them.
+DERIVERS = {"fold_in", "split", "clone", "key_data", "wrap_key_data"}
+
+_KEY_PRODUCER_SUFFIXES = ("worker_key", "worker_keys", "split_tree")
+_KEYISH_PARAMS = ("key", "wkey", "rng")
+
+
+def _is_keyish_param(name: str) -> bool:
+    return name in _KEYISH_PARAMS or name.endswith("_key") or name.endswith("key")
+
+
+@dataclasses.dataclass
+class _State:
+    """Per-scope tracking: which names are keys, and who consumed them where."""
+
+    keys: Set[str] = dataclasses.field(default_factory=set)
+    consumed: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def clone(self) -> "_State":
+        return _State(keys=set(self.keys), consumed=dict(self.consumed))
+
+    def merge(self, *others: "_State") -> None:
+        for o in others:
+            self.keys |= o.keys
+            for name, line in o.consumed.items():
+                self.consumed.setdefault(name, line)
+
+
+@register
+class RngKeyReuseRule(Rule):
+    name = "rng-key-reuse"
+    description = (
+        "a jax.random key consumed by two sketch/draw call sites without an "
+        "intervening fold_in/split — each sketch must be i.i.d. fresh "
+        "(privacy + unbiasedness both require it)"
+    )
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        if module.is_test_code:
+            return
+        self._module = module
+        self._findings: Dict[Tuple[int, str], Finding] = {}
+        # module top level is a scope too
+        self._run_scope(module.tree.body, params=())
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._run_scope(node.body, params=self._param_names(node))
+        yield from sorted(self._findings.values())
+
+    @staticmethod
+    def _param_names(fn: Union[ast.FunctionDef, ast.AsyncFunctionDef]) -> Tuple[str, ...]:
+        args = fn.args
+        names = [a.arg for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)]
+        return tuple(n for n in names if _is_keyish_param(n))
+
+    def _run_scope(self, body: List[ast.stmt], params: Tuple[str, ...]) -> None:
+        state = _State(keys=set(params))
+        self._walk_stmts(body, state)
+
+    # ------------------------------------------------------------- statement walk
+
+    def _walk_stmts(self, stmts: List[ast.stmt], state: _State) -> None:
+        for stmt in stmts:
+            self._walk_stmt(stmt, state)
+
+    def _walk_stmt(self, stmt: ast.stmt, state: _State) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested scopes are analyzed on their own
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._visit_expr(value, state)
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            produces = value is not None and self._produces_key(value, state)
+            for t in targets:
+                self._bind_target(t, produces, state)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._visit_expr(stmt.iter, state)
+            self._bind_target(stmt.target, self._produces_key(stmt.iter, state), state)
+            # two passes simulate consecutive iterations: a draw whose key isn't
+            # re-derived inside the body collides with itself on pass two.
+            self._walk_stmts(stmt.body, state)
+            self._walk_stmts(stmt.body, state)
+            self._walk_stmts(stmt.orelse, state)
+            return
+        if isinstance(stmt, ast.While):
+            self._visit_expr(stmt.test, state)
+            self._walk_stmts(stmt.body, state)
+            self._walk_stmts(stmt.body, state)
+            self._walk_stmts(stmt.orelse, state)
+            return
+        if isinstance(stmt, ast.If):
+            self._visit_expr(stmt.test, state)
+            then_state, else_state = state.clone(), state.clone()
+            self._walk_stmts(stmt.body, then_state)
+            self._walk_stmts(stmt.orelse, else_state)
+            state.merge(then_state, else_state)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._visit_expr(item.context_expr, state)
+            self._walk_stmts(stmt.body, state)
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk_stmts(stmt.body, state)
+            for h in stmt.handlers:
+                self._walk_stmts(h.body, state)
+            self._walk_stmts(stmt.orelse, state)
+            self._walk_stmts(stmt.finalbody, state)
+            return
+        if isinstance(stmt, (ast.Return, ast.Expr, ast.Raise, ast.Assert, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._visit_expr(child, state)
+            return
+        # pass/break/continue/import/global — nothing to do
+
+    def _bind_target(self, target: ast.AST, produces_key: bool, state: _State) -> None:
+        if isinstance(target, ast.Name):
+            state.consumed.pop(target.id, None)
+            if produces_key:
+                state.keys.add(target.id)
+            else:
+                state.keys.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind_target(elt, produces_key, state)
+        # attribute/subscript targets don't rebind tracked names
+
+    def _produces_key(self, value: ast.AST, state: _State) -> bool:
+        if isinstance(value, ast.Call):
+            resolved = self._module.resolve_call(value) or ""
+            last = resolved.split(".")[-1]
+            if resolved.startswith("jax.random.") and (last in DERIVERS or last in ("PRNGKey", "key")):
+                return True
+            if resolved.endswith(_KEY_PRODUCER_SUFFIXES):
+                return True
+            return False
+        if isinstance(value, ast.Name):
+            return value.id in state.keys  # aliasing: `k2 = key` keeps key-ness
+        if isinstance(value, (ast.Tuple, ast.List)):
+            return any(self._produces_key(e, state) for e in value.elts)
+        if isinstance(value, ast.Subscript):
+            return self._produces_key(value.value, state)
+        return False
+
+    # ------------------------------------------------------------ expression walk
+
+    def _visit_expr(self, expr: ast.AST, state: _State) -> None:
+        for node in self._walk_no_nested_scope(expr):
+            if isinstance(node, ast.Call):
+                self._visit_call(node, state)
+            elif isinstance(
+                node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+            ):
+                # comprehension == loop: element expr walked twice
+                masked = state.clone()
+                for gen in node.generators:
+                    self._visit_expr(gen.iter, masked)
+                    self._mask_target(gen.target, masked)
+                elts = (
+                    [node.key, node.value] if isinstance(node, ast.DictComp) else [node.elt]
+                )
+                for elt in elts:
+                    self._visit_expr(elt, masked)
+                    self._visit_expr(elt, masked)
+                state.merge(masked)
+
+    def _mask_target(self, target: ast.AST, state: _State) -> None:
+        if isinstance(target, ast.Name):
+            state.keys.discard(target.id)
+            state.consumed.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._mask_target(elt, state)
+
+    @staticmethod
+    def _walk_no_nested_scope(expr: ast.AST):
+        """ast.walk, but don't descend into lambdas/comprehensions (handled above)
+        or nested function defs."""
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(
+                node,
+                (ast.Lambda, ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp,
+                 ast.FunctionDef, ast.AsyncFunctionDef),
+            ):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _visit_call(self, call: ast.Call, state: _State) -> None:
+        resolved = self._module.resolve_call(call) or ""
+        last = resolved.split(".")[-1]
+        is_sampler = resolved.startswith("jax.random.") and last in SAMPLERS
+        is_sketch = last in SKETCH_CONSUMERS
+        if not (is_sampler or is_sketch):
+            return
+        key_args = []
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Name) and arg.id in state.keys:
+                key_args.append(arg)
+        for arg in key_args:
+            prior = state.consumed.get(arg.id)
+            if prior is not None:
+                f = self.finding(
+                    self._module,
+                    call,
+                    f"PRNG key `{arg.id}` already consumed at line {prior} — "
+                    "fold_in/split before drawing again: every sketch must be a "
+                    "fresh i.i.d. draw (privacy + unbiasedness)",
+                )
+                self._findings.setdefault((f.line, arg.id), f)
+            else:
+                state.consumed[arg.id] = call.lineno

@@ -1,0 +1,223 @@
+"""trace-hazard — host/trace boundary violations inside jit and Pallas bodies.
+
+Three hazard classes, all of which have bitten jax codebases (the PR-8
+``hadamard_matrix`` lru-cache tracer leak was this repo's turn):
+
+  * **host sync** — ``float(x)`` / ``int(x)`` / ``x.item()`` / ``np.asarray(x)``
+    on a traced value inside a jit/pallas body. Under ``jit`` this is a
+    ``ConcretizationTypeError`` at best and a silent recompile-per-value at
+    worst; in a Pallas kernel it can't be lowered at all.
+  * **python control flow on traced values** — ``if x > 0:`` inside a traced
+    body branches at *trace* time on a tracer. ``x.shape`` / ``x.dtype`` /
+    ``x.ndim`` tests are static and fine.
+  * **lru_cache over trace-dependent returns** — caching a function that builds
+    ``jnp``/``jax`` values means the first call under a trace stores that trace's
+    tracer (or a device array pinned to it) and replays it into every later
+    trace. Cache numpy on the host; convert per call (see
+    ``kernels/common.hadamard_matrix``).
+
+Traced bodies are found syntactically: functions decorated with ``jax.jit``
+(bare or via ``functools.partial``), and functions/lambdas passed as the first
+argument to ``jax.jit(...)`` or ``pl.pallas_call(...)`` (unwrapping a
+``functools.partial(...)`` wrapper). Host-sync and traced-``if`` checks fire
+only when the offending expression references a *parameter* of the traced
+function that isn't obviously static (annotated ``int``/``bool``/``float``/
+``str`` parameters are skipped) — a deliberate precision/recall trade-off for a
+lint gate.
+
+Scope: everywhere except ``tests/``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Union
+
+from repro.analysis.registry import Finding, Rule, register
+from repro.analysis.walker import Module
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PALLAS_SUFFIX = "pallas_call"
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_CACHE_NAMES = {"functools.lru_cache", "lru_cache", "functools.cache", "cache"}
+_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array", "jax.device_get"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "itemsize"}
+_STATIC_ANNOTATIONS = {"int", "bool", "float", "str", "tuple", "list", "dict"}
+
+_Fn = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+def _unwrap_partial(node: ast.AST, module: Module) -> ast.AST:
+    if isinstance(node, ast.Call) and (module.resolve_call(node) or "") in _PARTIAL_NAMES:
+        if node.args:
+            return node.args[0]
+    return node
+
+
+def _is_jit_call(call: ast.Call, module: Module) -> bool:
+    resolved = module.resolve_call(call) or ""
+    return resolved in _JIT_NAMES or resolved.split(".")[-1] == _PALLAS_SUFFIX
+
+
+def _traced_functions(module: Module) -> List[_Fn]:
+    """Function defs / lambdas whose bodies trace under jit or pallas_call."""
+    out: List[_Fn] = []
+    defs_by_name = {
+        n.name: n
+        for n in ast.walk(module.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in module.decorator_names(node):
+                if dec in _JIT_NAMES:
+                    out.append(node)
+                    break
+        elif isinstance(node, ast.Call) and _is_jit_call(node, module) and node.args:
+            target = _unwrap_partial(node.args[0], module)
+            if isinstance(target, ast.Lambda):
+                out.append(target)
+            elif isinstance(target, ast.Name) and target.id in defs_by_name:
+                out.append(defs_by_name[target.id])
+    # dedupe, preserve order
+    seen: Set[int] = set()
+    uniq: List[_Fn] = []
+    for fn in out:
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            uniq.append(fn)
+    return uniq
+
+
+def _traced_params(fn: _Fn) -> Set[str]:
+    """Parameter names that may carry traced values (static-annotated ones skipped)."""
+    args = fn.args
+    params: Set[str] = set()
+    for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+        ann = a.annotation
+        if ann is not None:
+            ann_src = ast.unparse(ann)
+            if any(tok in _STATIC_ANNOTATIONS for tok in ann_src.replace("|", " ").split()):
+                continue
+        params.add(a.arg)
+    if args.vararg:
+        params.add(args.vararg.arg)
+    return params
+
+
+def _traced_names_in(expr: ast.AST, module: Module, params: Set[str]) -> List[ast.Name]:
+    """Names in ``expr`` that reference traced params, excluding static accesses
+    (``x.shape``...), ``len(x)``, and ``isinstance(x, ...)``."""
+    hits = []
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Name) or node.id not in params:
+            continue
+        parent = module.parents.get(node)
+        if isinstance(parent, ast.Attribute) and parent.attr in _STATIC_ATTRS:
+            continue
+        if isinstance(parent, ast.Call):
+            fname = module.resolve_call(parent) or ""
+            if fname in ("len", "isinstance", "type"):
+                continue
+        hits.append(node)
+    return hits
+
+
+@register
+class TraceHazardRule(Rule):
+    name = "trace-hazard"
+    description = (
+        "host sync (float()/.item()/np.asarray) or python `if` on traced values "
+        "inside jit/pallas bodies, or lru_cache over functions building jax values "
+        "(the tracer-leak bug class)"
+    )
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        if module.is_test_code:
+            return
+        yield from self._cached_jax_builders(module)
+        for fn in _traced_functions(module):
+            params = _traced_params(fn)
+            if not params:
+                continue
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                yield from self._scan(stmt, module, params)
+
+    # ------------------------------------------------------------ per-body checks
+
+    def _scan(self, root: ast.AST, module: Module, params: Set[str]) -> Iterator[Finding]:
+        for node in ast.walk(root):
+            if isinstance(node, (ast.If, ast.While)):
+                hits = _traced_names_in(node.test, module, params)
+                if hits:
+                    names = ", ".join(sorted({h.id for h in hits}))
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        module,
+                        node,
+                        f"python `{kind}` on traced value(s) `{names}` inside a "
+                        "jit/pallas body — branch at trace time with static config, "
+                        "or use lax.cond/jnp.where",
+                    )
+            elif isinstance(node, ast.Call):
+                yield from self._check_sync_call(node, module, params)
+
+    def _check_sync_call(self, call: ast.Call, module: Module, params: Set[str]) -> Iterator[Finding]:
+        resolved = module.resolve_call(call) or ""
+        is_item = isinstance(call.func, ast.Attribute) and call.func.attr in ("item", "tolist")
+        if is_item:
+            hits = _traced_names_in(call.func.value, module, params)
+            if hits or isinstance(call.func.value, ast.Name) and call.func.value.id in params:
+                yield self.finding(
+                    module,
+                    call,
+                    f"`.{call.func.attr}()` on a traced value inside a jit/pallas body — "
+                    "host sync can't be lowered; keep the value on device",
+                )
+            return
+        if resolved in _SYNC_BUILTINS or resolved in _SYNC_CALLS:
+            for arg in call.args:
+                if _traced_names_in(arg, module, params):
+                    yield self.finding(
+                        module,
+                        call,
+                        f"`{resolved}(...)` forces a traced value to host inside a "
+                        "jit/pallas body — ConcretizationTypeError or a silent "
+                        "recompile per value",
+                    )
+                    return
+
+    # -------------------------------------------------------------- lru_cache leak
+
+    def _cached_jax_builders(self, module: Module) -> Iterator[Finding]:
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            decs = module.decorator_names(node)
+            if not any(d in _CACHE_NAMES for d in decs):
+                continue
+            culprit = self._jax_use(node, module)
+            if culprit is not None:
+                yield self.finding(
+                    module,
+                    node,
+                    f"lru_cache on `{node.name}`, which builds jax values "
+                    f"(`{culprit}`) — the first call under a trace caches that "
+                    "trace's value into every later trace (the hadamard_matrix "
+                    "leak class); cache numpy host-side and convert per call",
+                )
+
+    @staticmethod
+    def _jax_use(fn: ast.AST, module: Module) -> Optional[str]:
+        returns = getattr(fn, "returns", None)
+        if returns is not None:
+            ann = ast.unparse(returns)
+            if "jax.Array" in ann or "jnp.ndarray" in ann or "jax.numpy" in ann:
+                return ann
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                resolved = module.resolve_call(node) or ""
+                if resolved.startswith(("jax.", "jnp.")):
+                    return resolved
+        return None

@@ -1,0 +1,96 @@
+"""wallclock-in-runtime — no wall-clock reads where event ordering is decided.
+
+Paper guarantee this protects: **reproducibility of the serverless run**. The
+runtime engine's contract is "same seed ⇒ byte-identical event log + bitwise
+x̄" — ordering comes only from the simulated clock of a seeded LatencyModel,
+never from the machine. A single ``time.time()`` / ``perf_counter()`` read that
+feeds a deadline, a queue priority, or a telemetry record silently re-introduces
+host scheduling into the event order, and ``os.urandom`` is wall-clock's evil
+twin for the RNG contract.
+
+Scope:
+  * ``repro/runtime``, ``repro/serve``, ``repro/core`` — *strict*: every
+    wall-clock read is a finding; the allowlist decorator is deliberately NOT
+    honored here (use the simulated clock; a reviewed exception goes in the
+    baseline, not an annotation).
+  * ``repro/launch`` and top-level ``benchmarks/`` — wall-*cost* reporting to a
+    human is legitimate, but must be explicit: reads are findings unless the
+    enclosing function is decorated ``@sanctioned_wall_timer``
+    (``repro.analysis.annotations``).
+  * everywhere else — not checked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.annotations import SANCTIONED_WALL_TIMER
+from repro.analysis.registry import Finding, Rule, register
+from repro.analysis.walker import Module
+
+WALL_CALLS = {
+    "time.time",
+    "time.time_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.process_time",
+    "time.process_time_ns",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.datetime.today",
+    "datetime.date.today",
+    "os.urandom",
+}
+
+STRICT_SUBPACKAGES = {"runtime", "serve", "core"}
+SANCTIONABLE_SUBPACKAGES = {"launch"}
+SANCTIONABLE_TOP_DIRS = {"benchmarks"}
+
+
+@register
+class WallclockRule(Rule):
+    name = "wallclock-in-runtime"
+    description = (
+        "wall-clock reads (time.time/perf_counter/datetime.now/os.urandom) in "
+        "runtime/serve/core, or unsanctioned ones in launch/benchmarks — event "
+        "ordering must come from the simulated clock (same seed => identical log)"
+    )
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        sub = module.repro_subpackage
+        strict = sub in STRICT_SUBPACKAGES
+        sanctionable = sub in SANCTIONABLE_SUBPACKAGES or module.top_dir in SANCTIONABLE_TOP_DIRS
+        if not (strict or sanctionable):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = module.resolve_call(node)
+            if resolved not in WALL_CALLS:
+                continue
+            if not strict and self._sanctioned(module, node):
+                continue
+            where = f"repro.{sub}" if sub else module.top_dir
+            if strict:
+                msg = (
+                    f"wall-clock read `{resolved}` under {where} — ordering must come "
+                    "from the simulated clock (LatencyModel); wall time breaks the "
+                    "same-seed => byte-identical-log invariant"
+                )
+            else:
+                msg = (
+                    f"wall-clock read `{resolved}` outside a @{SANCTIONED_WALL_TIMER} "
+                    f"function — decorate the enclosing timer function to sanction "
+                    "wall-cost reporting"
+                )
+            yield self.finding(module, node, msg)
+
+    @staticmethod
+    def _sanctioned(module: Module, node: ast.Call) -> bool:
+        for fn in module.enclosing_functions(node):
+            for dec in module.decorator_names(fn):
+                if dec.split(".")[-1] == SANCTIONED_WALL_TIMER:
+                    return True
+        return False

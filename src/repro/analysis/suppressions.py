@@ -1,0 +1,50 @@
+"""Per-line suppression comments.
+
+    x = jax.random.normal(key, (n,))  # reprolint: disable=rng-key-reuse
+    t0 = time.time()                  # reprolint: disable=wallclock-in-runtime,trace-hazard
+    y = foo()                         # reprolint: disable=all
+
+The comment must sit on the line the finding is reported at — for a multi-line
+statement that is the line the offending *node* starts on. Suppressions are
+deliberate, reviewed exceptions ("these two solves share a key because the test
+is a parity check"); grandfathered findings belong in the baseline instead.
+"""
+from __future__ import annotations
+
+import io
+import tokenize
+from typing import Dict, Set
+
+from repro.analysis.registry import Finding
+
+_MARKER = "reprolint:"
+_DISABLE = "disable="
+
+
+def suppression_map(source: str) -> Dict[int, Set[str]]:
+    """Line number -> set of rule names disabled on that line ('all' disables all)."""
+    out: Dict[int, Set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            text = tok.string.lstrip("#").strip()
+            if not text.startswith(_MARKER):
+                continue
+            body = text[len(_MARKER) :].strip()
+            if not body.startswith(_DISABLE):
+                continue
+            rules = {r.strip() for r in body[len(_DISABLE) :].split(",") if r.strip()}
+            if rules:
+                out.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenError:
+        pass  # the file parsed as AST; a tokenize hiccup only loses suppressions
+    return out
+
+
+def is_suppressed(finding: Finding, suppressions: Dict[int, Set[str]]) -> bool:
+    rules = suppressions.get(finding.line)
+    if not rules:
+        return False
+    return "all" in rules or finding.rule in rules

@@ -1,0 +1,170 @@
+"""AST plumbing shared by every reprolint rule.
+
+The rules work on :class:`Module` objects — a parsed file plus the derived maps
+every rule needs: import-alias resolution (so ``jr.normal`` and
+``jax.random.normal`` look the same), parent links (so a call site can find its
+enclosing function), and path classification (which repo surface a file belongs
+to: ``repro.runtime`` vs ``benchmarks`` vs ``tests``).
+
+This module is stdlib-only by design: the analyzer must import cleanly in an
+environment without jax (CI lint tier, pre-commit).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import PurePosixPath
+from typing import Dict, Iterator, Optional, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+ScopeNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+def build_alias_map(tree: ast.Module) -> Dict[str, str]:
+    """Map local names to the fully qualified names their imports bind.
+
+    ``import jax.random as jr``      -> ``{"jr": "jax.random"}``
+    ``import jax``                   -> ``{"jax": "jax"}``
+    ``from jax import random``       -> ``{"random": "jax.random"}``
+    ``from time import time as now`` -> ``{"now": "time.time"}``
+
+    Only module-level and function-level imports are recorded; a later import of
+    the same name wins (shadowing inside one file is rare enough not to model).
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    head = a.name.split(".")[0]
+                    aliases[head] = head
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, None for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed file plus the derived structure rules share."""
+
+    path: str
+    source: str
+    tree: ast.Module
+    aliases: Dict[str, str] = dataclasses.field(default_factory=dict)
+    parents: Dict[ast.AST, ast.AST] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.aliases = build_alias_map(self.tree)
+        self.parents = {
+            child: parent for parent in ast.walk(self.tree) for child in ast.iter_child_nodes(parent)
+        }
+        self.lines = self.source.splitlines()
+
+    # ------------------------------------------------------------- name resolution
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Qualified dotted name of a Name/Attribute chain, through import aliases."""
+        d = dotted_name(node)
+        if d is None:
+            return None
+        head, _, rest = d.partition(".")
+        base = self.aliases.get(head)
+        if base is None:
+            return d
+        return f"{base}.{rest}" if rest else base
+
+    def resolve_call(self, call: ast.Call) -> Optional[str]:
+        return self.resolve(call.func)
+
+    # ------------------------------------------------------------------ structure
+
+    def enclosing_functions(self, node: ast.AST) -> Iterator[FunctionNode]:
+        """Innermost-first chain of function defs containing ``node``."""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield cur
+            cur = self.parents.get(cur)
+
+    def decorator_names(self, fn: FunctionNode) -> Tuple[str, ...]:
+        """Resolved dotted names of ``fn``'s decorators (Call decorators unwrapped:
+        both ``@jit`` and ``@partial(jit, ...)`` contribute ``jit``'s name)."""
+        out = []
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call):
+                name = self.resolve(dec.func)
+                if name:
+                    out.append(name)
+                for arg in dec.args:  # functools.partial(jax.jit, ...) etc.
+                    inner = self.resolve(arg)
+                    if inner:
+                        out.append(inner)
+            else:
+                name = self.resolve(dec)
+                if name:
+                    out.append(name)
+        return tuple(out)
+
+    def snippet(self, line: int) -> str:
+        """Stripped source text of a 1-indexed line (baseline fingerprints)."""
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    # ----------------------------------------------------------- path classification
+
+    @property
+    def parts(self) -> Tuple[str, ...]:
+        return PurePosixPath(self.path.replace("\\", "/")).parts
+
+    @property
+    def repro_subpackage(self) -> Optional[str]:
+        """``'runtime'`` for ``src/repro/runtime/engine.py``; None outside repro/."""
+        parts = self.parts
+        if "repro" not in parts:
+            return None
+        # last occurrence: an absolute checkout path may itself contain "repro"
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        rest = parts[i + 1 :]
+        if not rest:
+            return None
+        return "" if rest[0].endswith(".py") else rest[0]
+
+    @property
+    def top_dir(self) -> Optional[str]:
+        """First path segment (``'benchmarks'``, ``'tests'``, ``'src'``, ...)."""
+        parts = self.parts
+        return parts[0] if len(parts) > 1 else None
+
+    @property
+    def is_test_code(self) -> bool:
+        return self.top_dir == "tests" or self.parts[-1].startswith("test_")
+
+
+def parse_source(source: str, path: str) -> Module:
+    """Parse ``source`` as the file at ``path`` (virtual paths fine — tests use
+    them to place snippets under rule-scoped directories)."""
+    tree = ast.parse(source, filename=path)
+    return Module(path=path, source=source, tree=tree)
+
+
+def parse_file(path: str) -> Module:
+    with open(path, encoding="utf-8") as f:
+        return parse_source(f.read(), path)

@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import os
 from typing import Callable, Dict, Optional
 
 import jax
@@ -45,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import sketches as sk
 from repro.kernels import common as kcommon
+from repro.utils import env as envcfg
 
 # Default row-tile for blocked/streamed application. 4096 rows × 512 cols of f32 is
 # 8 MiB — comfortably inside a v5e core's VMEM budget alongside the (m, block) S tile.
@@ -932,11 +932,9 @@ def _mesh_batch_enabled() -> bool:
     ``REPRO_MESH_BATCH=1`` / ``0`` (tests force the mesh path on fake devices to
     check it is bitwise-identical to the loop).
     """
-    forced = os.environ.get("REPRO_MESH_BATCH", "").strip().lower()
-    if forced in ("1", "true", "yes"):
-        return True
-    if forced in ("0", "false", "no"):
-        return False
+    forced = envcfg.read_bool("REPRO_MESH_BATCH")
+    if forced is not None:
+        return forced
     return jax.default_backend() != "cpu"
 
 

@@ -9,11 +9,12 @@ reproduce identical sketches with zero coordination.
 from __future__ import annotations
 
 import functools
-import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.utils import env as envcfg
 
 _ROT = (13, 15, 26, 6, 17, 29, 16, 24)
 _PARITY = np.uint32(0x1BD11BDA)
@@ -32,11 +33,9 @@ def default_interpret() -> bool:
     place instead of hard-coded per call site. ``REPRO_PALLAS_INTERPRET=0/1``
     overrides the autodetection (e.g. to force-interpret on TPU while debugging).
     """
-    forced = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
-    if forced in ("1", "true", "yes"):
-        return True
-    if forced in ("0", "false", "no"):
-        return False
+    forced = envcfg.read_bool("REPRO_PALLAS_INTERPRET")
+    if forced is not None:
+        return forced
     return jax.default_backend() != "tpu"
 
 
@@ -61,13 +60,7 @@ def rng_rounds() -> int:
     always use the full :data:`DEFAULT_ROUNDS` — their cost is already ≤1 call
     per 32 entries, so there is nothing to win there.
     """
-    raw = os.environ.get("REPRO_RNG_ROUNDS", "").strip()
-    if not raw:
-        return DEFAULT_ROUNDS
-    r = int(raw)
-    if r <= 0 or r % 4:
-        raise ValueError(f"REPRO_RNG_ROUNDS must be a positive multiple of 4, got {r}")
-    return r
+    return envcfg.read_int("REPRO_RNG_ROUNDS", DEFAULT_ROUNDS, positive=True, multiple_of=4)
 
 
 def threefry2x32(

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.annotations import sanctioned_wall_timer
 from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config, shape_applicable
 from repro.configs import ASSIGNED
 from repro.data.specs import input_specs, batch_pspecs
@@ -184,6 +185,7 @@ def _collective_seconds(agg) -> Dict[str, float]:
     return {"total_s": total_s, "dcn_s": dcn_s, "wire_bytes": wire}
 
 
+@sanctioned_wall_timer  # lower/compile wall costs are part of the dry-run record
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                tuning: Optional[TrainTuning] = None,
                rules_override: Optional[ShardingRules] = None) -> Dict[str, Any]:

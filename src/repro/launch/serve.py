@@ -22,6 +22,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.annotations import sanctioned_wall_timer
 from repro.configs.base import get_config
 from repro.models import lm
 from repro.serve import Engine, ServeConfig, SolveServer
@@ -45,6 +46,7 @@ def _latency_model(args):
     raise ValueError(f"unknown latency model {args.latency!r}")
 
 
+@sanctioned_wall_timer  # reports wall cost of the admitted jobs to the operator
 def solve_main(args) -> int:
     from repro import runtime as rt
     from repro.core import sketches as sk, solve
@@ -90,6 +92,7 @@ def solve_main(args) -> int:
     return 0
 
 
+@sanctioned_wall_timer  # reports tok/s to the operator
 def lm_main(args) -> int:
     cfg = get_config(args.arch)
     if args.reduced:

@@ -11,12 +11,14 @@ import time
 
 import jax
 
+from repro.analysis.annotations import sanctioned_wall_timer
 from repro.configs.base import get_config
 from repro.optim import AdamWConfig
 from repro.optim.schedules import linear_warmup_cosine
 from repro.train import Trainer, TrainerConfig
 
 
+@sanctioned_wall_timer  # reports end-to-end training wall cost to the operator
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)

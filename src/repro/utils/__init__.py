@@ -1,1 +1,5 @@
-from repro.utils import prng, tree
+# NOTE: no eager `prng` import here. repro.utils.prng imports repro.kernels.common,
+# which imports repro.utils.env — an eager import would turn that chain into a
+# cycle. `from repro.utils import prng` still works everywhere: python resolves
+# submodule imports without the package __init__ naming them.
+from repro.utils import env, tree

@@ -6,8 +6,11 @@
 # makes the main process match, so mesh-building code paths see q > 1 too).
 #
 #   ./test.sh                 run the tier-1 pytest suite
-#   ./test.sh --fast          inner-loop tier: deselect `slow` / `subprocess`
-#                             marked tests (spawned pools, python -c meshes)
+#   ./test.sh --fast          inner-loop tier: reprolint gate, then deselect
+#                             `slow` / `subprocess` marked tests (spawned
+#                             pools, python -c meshes)
+#   ./test.sh --lint          reprolint only: the AST contract checks
+#                             (python -m repro.analysis src tests benchmarks)
 #   ./test.sh --bench-smoke   run every benchmark at one tiny shape (kernel /
 #                             perf-path regressions fail loudly here instead of
 #                             only showing up in the JSON summaries)
@@ -22,8 +25,17 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     exec python -m benchmarks.run --smoke "$@"
 fi
 
+if [[ "${1:-}" == "--lint" ]]; then
+    shift
+    exec python -m repro.analysis "$@"
+fi
+
 if [[ "${1:-}" == "--fast" ]]; then
     shift
+    # lint first: the AST gate is seconds and catches contract breaks before
+    # the suite spends minutes compiling kernels (it also runs inside the
+    # suite as tests/test_analysis_clean.py, so the full tier keeps the gate).
+    python -m repro.analysis src tests benchmarks
     exec python -m pytest -x -q -m "not slow and not subprocess" "$@"
 fi
 

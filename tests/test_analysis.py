@@ -1,0 +1,643 @@
+"""reprolint unit tests: one true-positive + one near-miss negative per rule,
+suppression comments, baseline round-trip, and CLI end-to-end injection runs.
+
+Fixture snippets are analyzed at *virtual* paths (``src/repro/runtime/...``)
+so each rule's path scoping is exercised without touching the real tree.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import Baseline, analyze_source, parse_source, rule_names
+from repro.analysis.cli import main as lint_main
+from repro.analysis.engine import check_module, run as lint_run
+from repro.analysis.registry import all_rules
+
+RUNTIME = "src/repro/runtime/engine.py"
+CORE = "src/repro/core/sketches.py"
+LAUNCH = "src/repro/launch/serve.py"
+
+
+def findings(source, path, rule=None):
+    out = analyze_source(textwrap.dedent(source), path)
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+def test_rule_registry_is_complete():
+    assert set(rule_names()) == {
+        "rng-key-reuse",
+        "wallclock-in-runtime",
+        "trace-hazard",
+        "env-read-in-trace",
+        "unpicklable-task-spec",
+    }
+    with pytest.raises(KeyError):
+        all_rules(["no-such-rule"])
+
+
+# --------------------------------------------------------------- rng-key-reuse
+
+
+def test_rng_key_reuse_two_draws():
+    found = findings(
+        """
+        import jax
+
+        def two_draws(key, n):
+            a = jax.random.normal(key, (n,))
+            b = jax.random.uniform(key, (n,))
+            return a + b
+        """,
+        CORE,
+        "rng-key-reuse",
+    )
+    assert len(found) == 1
+    assert found[0].line == 6
+    assert "`key`" in found[0].message
+
+
+def test_rng_key_reuse_across_loop_iterations():
+    found = findings(
+        """
+        import jax
+
+        def per_round(key, q):
+            outs = []
+            for r in range(q):
+                outs.append(jax.random.normal(key, (4,)))
+            return outs
+        """,
+        CORE,
+        "rng-key-reuse",
+    )
+    assert len(found) == 1
+
+
+def test_rng_fold_in_per_iteration_is_clean():
+    assert not findings(
+        """
+        import jax
+
+        def per_round(key, q):
+            outs = []
+            for r in range(q):
+                kr = jax.random.fold_in(key, r)
+                outs.append(jax.random.normal(kr, (4,)))
+            return outs
+        """,
+        CORE,
+        "rng-key-reuse",
+    )
+
+
+def test_rng_split_then_draw_is_clean():
+    assert not findings(
+        """
+        import jax
+
+        def split_draw(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (2,))
+            b = jax.random.normal(k2, (2,))
+            return a + b
+        """,
+        CORE,
+        "rng-key-reuse",
+    )
+
+
+def test_rng_exclusive_branches_are_clean():
+    assert not findings(
+        """
+        import jax
+
+        def branchy(key, flag):
+            if flag:
+                x = jax.random.normal(key, (2,))
+            else:
+                x = jax.random.uniform(key, (2,))
+            return x
+        """,
+        CORE,
+        "rng-key-reuse",
+    )
+
+
+def test_rng_sketch_consumer_counts_as_draw():
+    found = findings(
+        """
+        import jax
+        from repro.core.solve import sketch_and_solve
+
+        def solve_twice(spec, key, A, b):
+            x1 = sketch_and_solve(spec, key, A, b)
+            x2 = sketch_and_solve(spec, key, A, b)
+            return x1, x2
+        """,
+        CORE,
+        "rng-key-reuse",
+    )
+    assert len(found) == 1
+
+
+def test_rng_rule_skips_tests():
+    assert not findings(
+        """
+        import jax
+
+        def parity(key):
+            return jax.random.normal(key, (2,)), jax.random.normal(key, (2,))
+        """,
+        "tests/test_parity.py",
+        "rng-key-reuse",
+    )
+
+
+# --------------------------------------------------------- wallclock-in-runtime
+
+
+def test_wallclock_in_runtime_is_strict():
+    found = findings(
+        """
+        import time
+        from repro.analysis import sanctioned_wall_timer
+
+        @sanctioned_wall_timer
+        def deadline():
+            return time.time() + 1.0
+        """,
+        RUNTIME,
+        "wallclock-in-runtime",
+    )
+    # the decorator is deliberately NOT honored under runtime/
+    assert len(found) == 1
+    assert "simulated clock" in found[0].message
+
+
+def test_wallclock_sanctioned_in_launch_is_clean():
+    src = """
+    import time
+    from repro.analysis import sanctioned_wall_timer
+
+    @sanctioned_wall_timer
+    def report():
+        t0 = time.perf_counter()
+        return time.perf_counter() - t0
+    """
+    assert not findings(src, LAUNCH, "wallclock-in-runtime")
+    # same code without the decorator is a finding
+    bare = src.replace("    @sanctioned_wall_timer\n", "")
+    assert len(findings(bare, LAUNCH, "wallclock-in-runtime")) == 2
+
+
+def test_wallclock_aliased_import_detected():
+    found = findings(
+        """
+        from time import perf_counter as clock
+
+        def tick():
+            return clock()
+        """,
+        RUNTIME,
+        "wallclock-in-runtime",
+    )
+    assert len(found) == 1
+
+
+def test_wallclock_ignores_unchecked_surfaces():
+    assert not findings(
+        """
+        import time
+
+        def tick():
+            return time.time()
+        """,
+        "src/repro/data/loader.py",
+        "wallclock-in-runtime",
+    )
+
+
+# ----------------------------------------------------------------- trace-hazard
+
+
+def test_trace_hazard_python_if_on_traced_value():
+    found = findings(
+        """
+        import jax
+
+        @jax.jit
+        def relu(x):
+            if x > 0:
+                return x
+            return -x
+        """,
+        CORE,
+        "trace-hazard",
+    )
+    assert len(found) == 1
+
+
+def test_trace_hazard_host_sync_in_jit():
+    found = findings(
+        """
+        import jax
+
+        @jax.jit
+        def bad(x):
+            return float(x) * 2
+        """,
+        CORE,
+        "trace-hazard",
+    )
+    assert len(found) == 1
+
+
+def test_trace_hazard_static_param_branch_is_clean():
+    assert not findings(
+        """
+        import jax
+
+        @jax.jit
+        def f(x, n: int):
+            if n > 2:
+                return x * n
+            return x
+        """,
+        CORE,
+        "trace-hazard",
+    )
+
+
+def test_trace_hazard_shape_access_is_clean():
+    assert not findings(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x.ndim > 1 and len(x.shape) > 1:
+                return x.sum(axis=0)
+            return x
+        """,
+        CORE,
+        "trace-hazard",
+    )
+
+
+def test_trace_hazard_lru_cache_on_array_returning_fn():
+    found = findings(
+        """
+        import functools
+        import jax.numpy as jnp
+
+        @functools.lru_cache(maxsize=None)
+        def hadamard(n):
+            return jnp.ones((n, n))
+        """,
+        CORE,
+        "trace-hazard",
+    )
+    assert len(found) == 1
+    assert "lru_cache" in found[0].message
+
+
+def test_trace_hazard_lru_cache_on_scalar_fn_is_clean():
+    assert not findings(
+        """
+        import functools
+
+        @functools.lru_cache(maxsize=None)
+        def next_pow2(n):
+            m = 1
+            while m < n:
+                m *= 2
+            return m
+        """,
+        CORE,
+        "trace-hazard",
+    )
+
+
+# ------------------------------------------------------------ env-read-in-trace
+
+
+def test_env_read_flagged_outside_sanctioned_module():
+    found = findings(
+        """
+        import os
+
+        def rounds():
+            return int(os.environ.get("REPRO_RNG_ROUNDS", "20"))
+        """,
+        "src/repro/kernels/common.py",
+        "env-read-in-trace",
+    )
+    assert len(found) == 1
+    assert "repro.utils.env" in found[0].message
+
+
+def test_env_read_allowed_in_utils_env():
+    assert not findings(
+        """
+        import os
+
+        def read_raw(name):
+            return os.environ.get(name)
+        """,
+        "src/repro/utils/env.py",
+        "env-read-in-trace",
+    )
+
+
+def test_env_write_is_not_a_read():
+    assert not findings(
+        """
+        import os
+
+        def force_interpret():
+            os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+        """,
+        "src/repro/kernels/common.py",
+        "env-read-in-trace",
+    )
+
+
+# -------------------------------------------------------- unpicklable-task-spec
+
+
+def test_pickle_spec_lambda_field():
+    found = findings(
+        """
+        class _PicklableCompute:
+            pass
+
+        class BadSpec(_PicklableCompute):
+            def __init__(self, shift):
+                self.fn = lambda x: x + shift
+        """,
+        "src/repro/runtime/tasks.py",
+        "unpicklable-task-spec",
+    )
+    assert len(found) == 1
+    assert "lambda" in found[0].message
+
+
+def test_pickle_spec_lock_and_jax_array_fields():
+    found = findings(
+        """
+        import threading
+        import jax.numpy as jnp
+
+        class _PicklableCompute:
+            pass
+
+        class WorseSpec(_PicklableCompute):
+            def __init__(self, n):
+                self.lock = threading.Lock()
+                self.data = jnp.ones((n,))
+        """,
+        "src/repro/runtime/tasks.py",
+        "unpicklable-task-spec",
+    )
+    assert len(found) == 2
+
+
+def test_pickle_spec_numpy_fields_are_clean():
+    assert not findings(
+        """
+        import numpy as np
+
+        class _PicklableCompute:
+            pass
+
+        class GoodSpec(_PicklableCompute):
+            def __init__(self, n):
+                self.data = np.ones((n,))
+                self.n = int(n)
+        """,
+        "src/repro/runtime/tasks.py",
+        "unpicklable-task-spec",
+    )
+
+
+def test_pickle_spec_transitive_subclass_checked():
+    found = findings(
+        """
+        class _PicklableCompute:
+            pass
+
+        class MidSpec(_PicklableCompute):
+            pass
+
+        class LeafSpec(MidSpec):
+            def __init__(self):
+                self.fn = lambda: 0
+        """,
+        "src/repro/runtime/tasks.py",
+        "unpicklable-task-spec",
+    )
+    assert len(found) == 1
+
+
+def test_pickle_spec_plain_class_not_checked():
+    assert not findings(
+        """
+        class NotASpec:
+            def __init__(self):
+                self.fn = lambda: 0
+        """,
+        "src/repro/runtime/tasks.py",
+        "unpicklable-task-spec",
+    )
+
+
+# ----------------------------------------------------------------- suppressions
+
+
+def test_same_line_suppression_swallows_finding():
+    src = textwrap.dedent(
+        """
+        import time
+
+        def deadline():
+            return time.time()  # reprolint: disable=wallclock-in-runtime
+        """
+    )
+    assert not findings(src, RUNTIME, "wallclock-in-runtime")
+    # ...but the engine still counts it, so suppressions stay visible
+    module = parse_source(src, RUNTIME)
+    _, suppressed = check_module(module, all_rules())
+    assert suppressed == 1
+
+
+def test_suppression_is_rule_specific():
+    src = textwrap.dedent(
+        """
+        import time
+
+        def deadline():
+            return time.time()  # reprolint: disable=rng-key-reuse
+        """
+    )
+    assert len(findings(src, RUNTIME, "wallclock-in-runtime")) == 1
+
+
+def test_disable_all_suppresses_everything():
+    src = textwrap.dedent(
+        """
+        import time
+
+        def deadline():
+            return time.time()  # reprolint: disable=all
+        """
+    )
+    assert not findings(src, RUNTIME)
+
+
+# --------------------------------------------------------------------- baseline
+
+
+def _write_tree(root, rel, source):
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return p
+
+
+BAD_RUNTIME = """
+import time
+
+def deadline():
+    return time.time()
+"""
+
+
+def test_baseline_round_trip(tmp_path):
+    _write_tree(tmp_path, "src/repro/runtime/engine.py", BAD_RUNTIME)
+    report = lint_run([str(tmp_path / "src")])
+    assert len(report.new) == 1 and report.exit_code == 1
+
+    baseline_path = tmp_path / "reprolint-baseline.json"
+    Baseline.from_findings(report.new, report.snippets).save(str(baseline_path))
+    reloaded = Baseline.load(str(baseline_path))
+    assert len(reloaded) == 1
+
+    again = lint_run([str(tmp_path / "src")], baseline=reloaded)
+    assert again.exit_code == 0
+    assert not again.new and len(again.grandfathered) == 1
+
+
+def test_baseline_survives_line_drift_but_not_duplication(tmp_path):
+    _write_tree(tmp_path, "src/repro/runtime/engine.py", BAD_RUNTIME)
+    report = lint_run([str(tmp_path / "src")])
+    baseline = Baseline.from_findings(report.new, report.snippets)
+
+    # push the finding two lines down: fingerprint is line-content based
+    _write_tree(tmp_path, "src/repro/runtime/engine.py", "\n\n" + BAD_RUNTIME)
+    assert lint_run([str(tmp_path / "src")], baseline=baseline).exit_code == 0
+
+    # a second copy of the same bug is NOT covered by the one baseline entry
+    dup = BAD_RUNTIME + "\n\ndef deadline2():\n    return time.time()\n"
+    _write_tree(tmp_path, "src/repro/runtime/engine.py", dup)
+    report = lint_run([str(tmp_path / "src")], baseline=baseline)
+    assert report.exit_code == 1
+    assert len(report.new) == 1 and len(report.grandfathered) == 1
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    assert len(Baseline.load(str(tmp_path / "absent.json"))) == 0
+
+
+# ------------------------------------------------------------- CLI end-to-end
+
+
+def test_cli_injected_wallclock_fails(tmp_path, capsys):
+    _write_tree(tmp_path, "src/repro/runtime/engine.py", BAD_RUNTIME)
+    rc = lint_main([str(tmp_path / "src"), "--no-baseline"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "wallclock-in-runtime" in out
+    assert "engine.py:5" in out
+
+
+def test_cli_injected_key_reuse_fails(tmp_path, capsys):
+    _write_tree(
+        tmp_path,
+        "src/repro/core/sketchy.py",
+        """
+        import jax
+
+        def two_draws(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.normal(key, (2,))
+            return a + b
+        """,
+    )
+    rc = lint_main([str(tmp_path / "src"), "--no-baseline"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "rng-key-reuse" in out
+    assert "sketchy.py:6" in out
+
+
+def test_cli_injected_lambda_spec_fails(tmp_path, capsys):
+    _write_tree(
+        tmp_path,
+        "src/repro/runtime/tasks.py",
+        """
+        class _PicklableCompute:
+            pass
+
+        class BadSpec(_PicklableCompute):
+            def __init__(self):
+                self.fn = lambda: 0
+        """,
+    )
+    rc = lint_main([str(tmp_path / "src"), "--no-baseline"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "unpicklable-task-spec" in out
+    assert "tasks.py:7" in out
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, capsys):
+    _write_tree(tmp_path, "src/repro/core/ok.py", "X = 1\n")
+    rc = lint_main([str(tmp_path / "src"), "--no-baseline"])
+    assert rc == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_write_baseline_then_gate(tmp_path, capsys):
+    _write_tree(tmp_path, "src/repro/runtime/engine.py", BAD_RUNTIME)
+    baseline = tmp_path / "reprolint-baseline.json"
+    assert lint_main([str(tmp_path / "src"), "--baseline", str(baseline), "--write-baseline"]) == 0
+    data = json.loads(baseline.read_text())
+    assert data["version"] == 1 and len(data["entries"]) == 1
+    capsys.readouterr()
+    assert lint_main([str(tmp_path / "src"), "--baseline", str(baseline)]) == 0
+    assert "1 baselined" in capsys.readouterr().out
+
+
+def test_cli_json_report(tmp_path, capsys):
+    _write_tree(tmp_path, "src/repro/runtime/engine.py", BAD_RUNTIME)
+    rc = lint_main([str(tmp_path / "src"), "--no-baseline", "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["new"][0]["rule"] == "wallclock-in-runtime"
+
+
+def test_cli_parse_error_exits_two(tmp_path, capsys):
+    _write_tree(tmp_path, "src/repro/core/broken.py", "def oops(:\n")
+    rc = lint_main([str(tmp_path / "src"), "--no-baseline"])
+    assert rc == 2
+    assert "parse error" in capsys.readouterr().err
+
+
+def test_cli_unknown_rule_exits_two(capsys):
+    assert lint_main(["--select", "bogus-rule"]) == 2
+    assert "bogus-rule" in capsys.readouterr().err

@@ -1,0 +1,38 @@
+"""Tier-1 gate: the real tree is reprolint-clean.
+
+This is the lint gate that rides every ``./test.sh`` / ``./test.sh --fast`` run:
+the analyzer sweeps the actual ``src``/``tests``/``benchmarks`` trees and any
+non-baselined finding fails the suite. The committed baseline is empty — new
+findings must be fixed, sanctioned (``@sanctioned_wall_timer``), or suppressed
+with a visible ``# reprolint: disable=<rule>`` comment, not grandfathered.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis import BASELINE_FILENAME, Baseline
+from repro.analysis.engine import run
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _repo_paths():
+    return [
+        os.path.join(REPO_ROOT, p)
+        for p in ("src", "tests", "benchmarks")
+        if os.path.isdir(os.path.join(REPO_ROOT, p))
+    ]
+
+
+def test_tree_is_lint_clean():
+    baseline = Baseline.load(os.path.join(REPO_ROOT, BASELINE_FILENAME))
+    report = run(_repo_paths(), baseline=baseline)
+    assert not report.parse_errors, report.parse_errors
+    assert not report.new, "\n" + "\n".join(f.format() for f in report.new)
+
+
+def test_committed_baseline_is_empty():
+    """The baseline exists for adoption mechanics, but the goal state — enforced
+    here — is zero grandfathered findings. Shrink it, never grow it."""
+    baseline = Baseline.load(os.path.join(REPO_ROOT, BASELINE_FILENAME))
+    assert len(baseline) == 0

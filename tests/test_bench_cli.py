@@ -1,0 +1,24 @@
+"""benchmarks.run CLI: unknown keys fail loudly, listing what is registered."""
+from __future__ import annotations
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def bench_run():
+    return pytest.importorskip("benchmarks.run")
+
+
+def test_unknown_key_lists_registered_keys(bench_run, capsys):
+    rc = bench_run.main(["--only", "bogus,fused"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert "unknown benchmark key(s) bogus" in err
+    # the full registry is echoed so the caller can pick a valid key
+    for key in sorted(bench_run.MODULES):
+        assert key in err
+
+
+def test_known_keys_pass_validation(bench_run):
+    unknown = [k for k in ["fused", "thm1"] if k not in bench_run.MODULES]
+    assert unknown == []
